@@ -1,0 +1,56 @@
+"""Paper Fig. 10: SeqCDC optimization breakdown at 16 KB chunks.
+
+BASE      = sequential scan, no content-defined skipping (SkipTrigger = inf)
+SEQ       = sequential scan + content-defined skipping
+VBASE     = two-phase vectorized, no content-defined skipping
+VSEQ      = two-phase vectorized + content-defined skipping
+VSEQ-G    = VSEQ with the O(1)-gather automaton step (beyond-paper, SSPerf)
+
+On TPU the mask phase reads every byte regardless of skipping (DESIGN.md
+SS2), so the VBASE->VSEQ gain comes from the automaton phase doing fewer
+block-events — the breakdown quantifies exactly how much of the paper's
+CPU-side skip benefit survives the bulk-parallel translation per dataset.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core.chunker import SeqCDCChunker, SeqCDCSequentialChunker
+from repro.core.params import paper_params
+
+from .common import dataset, emit, time_throughput
+
+DATASETS = ["DEB", "DEV", "LNX", "RDS", "TPCC"]
+
+
+def _variants(avg: int):
+    p = paper_params(avg)
+    no_skip = dataclasses.replace(p, skip_trigger=1 << 20)
+    return {
+        "BASE": (SeqCDCSequentialChunker, {"params": no_skip}),
+        "SEQ": (SeqCDCSequentialChunker, {"params": p}),
+        "VBASE": (SeqCDCChunker, {"params": no_skip, "step_impl": "wide"}),
+        "VSEQ": (SeqCDCChunker, {"params": p, "step_impl": "wide"}),
+        "VSEQ-G": (SeqCDCChunker, {"params": p, "step_impl": "gather"}),
+    }
+
+
+def run(budget: str = "small"):
+    avg = 16384
+    rows = []
+    mb_seq = 2 if budget == "small" else 8
+    mb_vec = 16 if budget == "small" else 64
+    for ds in DATASETS:
+        for name, (cls, kw) in _variants(avg).items():
+            mb = mb_seq if name in ("BASE", "SEQ") else mb_vec
+            data = dataset(ds, mb)
+            c = cls(avg, **kw)
+            res = time_throughput(lambda: c.chunk(data), data.nbytes)
+            rows.append({"figure": "fig10-breakdown", "dataset": ds,
+                         "variant": name, "gbps": res["gbps"], "mb": mb})
+    emit(rows, "SeqCDC optimization breakdown (fig 10)")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

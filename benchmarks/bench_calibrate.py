@@ -1,0 +1,34 @@
+"""Paper SSV "Obtaining parameter values": Monte-Carlo calibration.
+
+Re-runs the randomized-data simulation that produced core/calibrate.py's
+frozen CALIBRATED table and reports achieved average chunk sizes for both
+the paper's Table I parameters and the re-calibrated ones on this substrate.
+"""
+from __future__ import annotations
+
+from repro.core import make_chunker
+from repro.core.calibrate import CALIBRATED, calibrated_kwargs
+from repro.core.params import paper_params
+
+from .common import emit, random_data
+
+
+def run(budget: str = "small"):
+    mb = 4 if budget == "small" else 16
+    data = random_data(mb, seed=0)
+    rows = []
+    for avg in (4096, 8192, 16384):
+        paper = make_chunker("seqcdc_numpy", avg, params=paper_params(avg))
+        calib = make_chunker("seqcdc_numpy", avg, **calibrated_kwargs("seqcdc", avg))
+        rows.append({
+            "figure": "tab1-calibration", "avg_target": avg,
+            "paper_mean": float(paper.chunk_lengths(data).mean()),
+            "calibrated_mean": float(calib.chunk_lengths(data).mean()),
+            "calibrated_params": str(CALIBRATED[avg]["seqcdc"]).replace(",", ";"),
+        })
+    emit(rows, "parameter calibration (table I, paper SSV)")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,51 @@
+"""Paper Figs. 1 & 7 (native CDC throughput x chunk size) and Figs. 8/9/12
+(vector-accelerated throughput).
+
+Substrate note (DESIGN.md SS2): the paper's unaccelerated-vs-AVX axis maps
+here to *sequential semantics* (per-byte lax.scan / while_loop — "SEQ") vs
+*two-phase vectorized* (bulk bitmaps + block automaton — "VSEQ"); XLA:CPU
+emits AVX for the vectorized path, so the gap measured on this container is
+a real scalar-vs-SIMD gap of the same nature as the paper's.
+"""
+from __future__ import annotations
+
+from repro.core import make_chunker
+from repro.core.calibrate import calibrated_kwargs
+
+from .common import emit, random_data, time_throughput
+
+NATIVE = ["rabin_seq", "crc_seq", "gear_seq", "fastcdc_seq", "ae_seq", "ram_seq", "seqcdc_seq"]
+VECTOR = ["rabin", "crc", "gear", "fastcdc", "tttd", "ae", "ram", "seqcdc", "seqcdc_numpy"]
+SIZES = [4096, 8192, 16384]
+
+#: per-algo corpus budget (MiB, small budget) — the gather-bound hash-based
+#: vector substrates run ~3-6 MB/s on CPU, the rest run 0.1-1 GB/s
+_SLOW = {"rabin", "crc", "gear", "fastcdc", "tttd"}
+
+
+def _mb_for(name: str, budget: str) -> int:
+    if name in _SLOW:
+        return 4 if budget == "small" else 16
+    if name.endswith("_seq"):
+        return 4 if budget == "small" else 16
+    return 16 if budget == "small" else 64
+
+
+def run(budget: str = "small"):
+    rows = []
+    for avg in SIZES:
+        for group, names in (("fig7-native", NATIVE), ("fig8-vector", VECTOR)):
+            for name in names:
+                data = random_data(_mb_for(name, budget))
+                c = make_chunker(name, avg, **calibrated_kwargs(name, avg))
+                res = time_throughput(
+                    lambda: c.chunk(data), data.nbytes, repeats=2, warmup=1
+                )
+                rows.append({"figure": group, "algo": name, "avg_kb": avg // 1024,
+                             "gbps": res["gbps"], "mb": data.nbytes >> 20})
+    emit(rows, "chunking throughput (figs 1/7/8/9)")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,33 @@
+"""Paper Fig. 11: chunk-size CDF per algorithm (TPCC analogue, 8/16 KB)."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import make_chunker
+from repro.core.calibrate import calibrated_kwargs
+
+from .common import dataset, emit
+
+ALGOS = ["rabin", "crc", "gear", "fastcdc", "tttd", "ae", "ram", "seqcdc"]
+PCTS = [1, 10, 25, 50, 75, 90, 99]
+
+
+def run(budget: str = "small"):
+    mb = 24 if budget == "small" else 64
+    data = dataset("TPCC", mb)
+    rows = []
+    for avg in (8192, 16384):
+        for name in ALGOS:
+            c = make_chunker(name, avg, **calibrated_kwargs(name, avg))
+            lens = c.chunk_lengths(data)
+            pct = np.percentile(lens, PCTS)
+            row = {"figure": "fig11-cdf", "algo": name, "avg_kb": avg // 1024,
+                   "mean": float(lens.mean()), "n_chunks": int(lens.size)}
+            row.update({f"p{p}": float(v) for p, v in zip(PCTS, pct)})
+            rows.append(row)
+    emit(rows, "chunk-size distribution (fig 11)")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,59 @@
+"""Paper SSV "x86 intrinsics performance": the VPU-primitive analogue.
+
+The paper microbenchmarks ffs/pdep/tzcnt/popcnt because boundary detection
+and skip triggering depend on them.  Our TPU mapping replaces them with
+masked argmin (ffs), cumsum+argmax (pdep/tzcnt) and sum-of-bools (popcnt)
+over W-wide blocks (DESIGN.md SS2); this bench times each primitive and the
+two automaton step implementations built from them.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import paper_params
+from repro.core.seqcdc import boundaries_two_phase
+
+from .common import emit, random_data, time_throughput
+
+_BIG = jnp.int32(1 << 30)
+
+
+def run(budget: str = "small"):
+    mb = 8 if budget == "small" else 32
+    n = mb << 20
+    rng = np.random.default_rng(3)
+    bits = jnp.asarray(rng.random(n) < 0.01)
+    W = 256
+    blocks = bits.reshape(-1, W)
+    iota = jnp.arange(W, dtype=jnp.int32)
+    rows = []
+
+    ffs = jax.jit(lambda b: jnp.min(jnp.where(b, iota, _BIG), axis=-1))
+    popcnt = jax.jit(lambda b: jnp.sum(b, axis=-1, dtype=jnp.int32))
+    nth = jax.jit(
+        lambda b: jnp.argmax(jnp.cumsum(b.astype(jnp.int32), axis=-1) > 3, axis=-1)
+    )
+    for name, fn in [("ffs=masked-argmin", ffs), ("popcnt=sum", popcnt),
+                     ("nth-set=cumsum-argmax", nth)]:
+        res = time_throughput(lambda: jax.block_until_ready(fn(blocks)), n)
+        rows.append({"figure": "sec5-intrinsics", "primitive": name,
+                     "gbits_per_s": res["gbps"], "block_w": W})
+
+    # automaton step cost: wide (O(W)/block) vs gather (O(1)/block)
+    data = jnp.asarray(random_data(mb, seed=4))
+    p = paper_params(16384)
+    for impl in ("wide", "gather"):
+        fn = jax.jit(
+            lambda d, impl=impl: boundaries_two_phase(d, p, step_impl=impl)[1]
+        )
+        res = time_throughput(lambda: jax.block_until_ready(fn(data)), n)
+        rows.append({"figure": "sec5-intrinsics", "primitive": f"automaton-{impl}",
+                     "gbits_per_s": res["gbps"], "block_w": p.block_width})
+    emit(rows, "VPU-primitive microbench (paper SSV analogue)")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

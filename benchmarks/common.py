@@ -1,0 +1,61 @@
+"""Shared benchmark utilities: timing, corpora, CSV emission."""
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, List
+
+import numpy as np
+
+from repro.data import corpus as corpus_mod
+
+GiB = 1 << 30
+MiB = 1 << 20
+
+
+def time_throughput(fn: Callable[[], None], nbytes: int, *, repeats: int = 3,
+                    warmup: int = 1) -> Dict[str, float]:
+    """Best-of-N wall-clock throughput (GB/s) after warmup (jit compile)."""
+    for _ in range(warmup):
+        fn()
+    times = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        times.append(time.perf_counter() - t0)
+    best = min(times)
+    return {"seconds": best, "gbps": nbytes / best / 1e9}
+
+
+_CORPUS_CACHE: Dict[tuple, np.ndarray] = {}
+
+
+def dataset(name: str, mb: int) -> np.ndarray:
+    key = (name, mb)
+    if key not in _CORPUS_CACHE:
+        _CORPUS_CACHE[key] = corpus_mod.load_dataset(name, mb)
+    return _CORPUS_CACHE[key]
+
+
+def random_data(mb: int, seed: int = 0) -> np.ndarray:
+    key = ("RAND", mb, seed)
+    if key not in _CORPUS_CACHE:
+        _CORPUS_CACHE[key] = np.random.default_rng(seed).integers(
+            0, 256, mb * MiB, dtype=np.uint8
+        )
+    return _CORPUS_CACHE[key]
+
+
+def emit(rows: List[Dict], title: str):
+    if not rows:
+        return
+    cols = list(rows[0])
+    print(f"\n# {title}")
+    print(",".join(cols))
+    for r in rows:
+        print(",".join(_fmt(r.get(c)) for c in cols))
+
+
+def _fmt(v) -> str:
+    if isinstance(v, float):
+        return f"{v:.4g}"
+    return str(v)

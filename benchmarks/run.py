@@ -1,0 +1,48 @@
+"""Benchmark harness entry point: one module per paper table/figure.
+
+  python -m benchmarks.run            # default (small) budget
+  python -m benchmarks.run --full     # paper-scale corpora
+  python -m benchmarks.run --only bench_chunking
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+MODULES = [
+    "bench_calibrate",      # Table I / SSV
+    "bench_chunking",       # Figs 1, 7, 8, 9, 12
+    "bench_space_savings",  # Figs 5, 6 / Table III
+    "bench_breakdown",      # Fig 10
+    "bench_distribution",   # Fig 11
+    "bench_shift",          # SSIV
+    "bench_intrinsics",     # SSV microbench (VPU analogue)
+    "bench_pipeline",       # framework-level (ingest + checkpoint)
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+    budget = "full" if args.full else "small"
+
+    mods = [m for m in MODULES if args.only is None or args.only in m]
+    ok = True
+    for name in mods:
+        mod = __import__(f"benchmarks.{name}", fromlist=["run"])
+        t0 = time.time()
+        try:
+            mod.run(budget)
+            print(f"## {name} done in {time.time()-t0:.1f}s", file=sys.stderr)
+        except Exception as e:  # pragma: no cover
+            ok = False
+            print(f"## {name} FAILED: {type(e).__name__}: {e}", file=sys.stderr)
+    if not ok:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,36 @@
+"""Quickstart: SeqCDC chunking + deduplication in ten lines.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import sys
+
+sys.path.insert(0, "src")
+
+import numpy as np
+
+from repro.core import make_chunker
+from repro.data import snapshot_series
+from repro.dedup.store import BlockStore
+
+# two "backups" of the same volume, second one lightly edited (byte shifts!)
+snap_a, snap_b = list(snapshot_series(base_bytes=4 << 20, snapshots=2,
+                                      edit_rate=5e-5, seed=1))
+
+store = BlockStore()
+chunker = make_chunker("seqcdc", avg_size=8192)  # the paper's algorithm
+
+for name, snap in [("A", snap_a), ("B", snap_b)]:
+    bounds = chunker.chunk(snap)
+    keys = store.put_stream(snap, bounds)
+    print(f"snapshot {name}: {snap.nbytes >> 20} MiB -> {len(keys)} chunks, "
+          f"store now holds {store.stored_bytes >> 20} MiB unique")
+    assert store.get_stream(keys) == snap.tobytes()  # lossless
+
+print(f"space savings: {store.savings:.1%} (Eq. 1 of the paper)")
+
+# contrast with fixed-size chunking (XC baseline): byte shifts kill dedup
+store_xc = BlockStore()
+xc = make_chunker("fixed", avg_size=8192)
+for snap in (snap_a, snap_b):
+    store_xc.put_stream(snap, xc.chunk(snap))
+print(f"fixed-size savings: {store_xc.savings:.1%} — byte-shifting problem")

@@ -1,0 +1,43 @@
+"""Batched serving example: continuous batching over mixed-length prompts.
+
+  PYTHONPATH=src python examples/serve_batched.py
+
+Spins up the slot-based engine on a reduced llama config, submits more
+requests than slots, and verifies the greedy outputs equal the naive
+(unbatched, uncached) forward pass — KV-cache serving correctness.
+"""
+import sys
+
+sys.path.insert(0, "src")
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_reduced
+from repro.models import lm
+from repro.serve import Engine, ServeConfig
+
+cfg = get_reduced("llama3.2-1b")
+params = lm.init_params(cfg, jax.random.PRNGKey(0))
+rng = np.random.default_rng(7)
+
+engine = Engine(cfg, params, ServeConfig(max_slots=3, cache_len=128, max_new_tokens=12))
+prompts = {engine.submit(rng.integers(0, cfg.vocab_size, int(rng.integers(4, 40)))): None
+           for _ in range(7)}
+results = engine.run()
+print(f"served {len(results)} requests on 3 slots (continuous batching)")
+
+# verify one request against the naive no-cache reference
+rid = min(results)
+req = [r for r in engine.done.values() if r.rid == rid][0]
+seq = list(map(int, req.prompt))
+ref = []
+for _ in range(12):
+    logits = lm.forward(cfg, params, {"tokens": jnp.asarray(seq)[None]})
+    t = int(jnp.argmax(logits[0, -1]))
+    ref.append(t)
+    seq.append(t)
+assert results[rid] == ref, "engine must match the uncached reference"
+print(f"request {rid}: {len(results[rid])} tokens, bit-identical to the "
+      "uncached forward pass")

@@ -1,0 +1,55 @@
+"""Dev sanity: all SeqCDC implementations agree with the slow oracle."""
+import sys
+
+import numpy as np
+
+sys.path.insert(0, "/root/repo/src")
+
+import jax.numpy as jnp
+
+from repro.core import oracle, seqcdc
+from repro.core.params import SeqCDCParams, paper_params
+
+rng = np.random.default_rng(0)
+
+# Small params so events are dense on small inputs.
+small = SeqCDCParams(
+    avg_size=256, seq_length=3, skip_trigger=6, skip_size=32,
+    min_size=64, max_size=512,
+)
+
+cases = []
+for n in [0, 1, 5, 63, 64, 65, 100, 1000, 5000, 20000]:
+    cases.append(rng.integers(0, 256, n, dtype=np.uint8))
+# low-entropy / adversarial
+cases.append(np.zeros(5000, dtype=np.uint8))
+cases.append(np.arange(5000, dtype=np.uint32).astype(np.uint8))  # sawtooth inc
+cases.append((255 - np.arange(5000, dtype=np.uint32) % 256).astype(np.uint8))
+cases.append(rng.integers(0, 4, 20000, dtype=np.uint8))  # low entropy
+
+fail = 0
+for params in [small, paper_params(8192), paper_params(4096), paper_params(16384),
+               SeqCDCParams(avg_size=256, seq_length=3, skip_trigger=6,
+                            skip_size=32, min_size=64, max_size=512,
+                            mode="decreasing")]:
+    for i, d in enumerate(cases):
+        ref = oracle.boundaries_slow(d, params)
+        ev = oracle.boundaries_numpy(d, params).tolist()
+        if ev != ref:
+            print(f"[numpy-event] params={params.avg_size} case{i} n={d.size}: {ev[:6]} vs {ref[:6]}")
+            fail += 1
+        for name, fn in [
+            ("two_phase_wide", lambda x: seqcdc.boundaries_two_phase(x, params, step_impl="wide")),
+            ("two_phase_gather", lambda x: seqcdc.boundaries_two_phase(x, params, step_impl="gather")),
+            ("sequential", lambda x: seqcdc.boundaries_sequential(x, params)),
+        ]:
+            if d.size == 0:
+                continue
+            b, c = fn(jnp.asarray(d))
+            got = np.asarray(b)[: int(c)].tolist()
+            if got != ref:
+                print(f"[{name}] params avg={params.avg_size} case{i} n={d.size}:")
+                print("  got", got[:8], "... len", len(got))
+                print("  ref", ref[:8], "... len", len(ref))
+                fail += 1
+print("FAILURES:", fail)

@@ -1,0 +1,102 @@
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Hillclimb profiler: one cell -> roofline terms + the heaviest ops.
+
+  PYTHONPATH=src python scripts/hillclimb.py --arch phi3-medium-14b \\
+      --shape prefill_32k [--multi] [--dump /tmp/cell.hlo]
+
+Prints the three roofline terms and the top-K most expensive collectives /
+memory movers / dots from the trip-count-weighted HLO cost model — the
+"profile" against which optimization hypotheses are formed (EXPERIMENTS.md
+SSPerf).
+"""
+import argparse
+import re
+import sys
+import time
+from collections import defaultdict
+
+sys.path.insert(0, "src")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--multi", action="store_true")
+    ap.add_argument("--dump", default=None)
+    ap.add_argument("--topk", type=int, default=12)
+    args = ap.parse_args()
+
+    from repro.configs import SHAPES, get_config
+    from repro.launch.dryrun import build_cell
+    from repro.launch.mesh import make_production_mesh
+    from repro.roofline import analyze
+    from repro.roofline.hlo_cost import HloCostModel, _shape_elems_bytes
+
+    cfg = get_config(args.arch)
+    shape = SHAPES[args.shape]
+    mesh = make_production_mesh(multi_pod=args.multi)
+    t0 = time.time()
+    jfn, cell_args = build_cell(cfg, shape, mesh)
+    with mesh:
+        compiled = jfn.lower(*cell_args).compile()
+    print(f"compiled in {time.time()-t0:.1f}s")
+    text = compiled.as_text()
+    if args.dump:
+        with open(args.dump, "w") as f:
+            f.write(text)
+
+    rl = analyze.from_compiled(args.arch, args.shape, "mesh", mesh.size,
+                               compiled, cfg=cfg, shape_cfg=shape)
+    mem = compiled.memory_analysis()
+    print(f"\nterms: compute={rl.t_compute:.3f}s memory={rl.t_memory:.3f}s "
+          f"collective={rl.t_collective:.3f}s bottleneck={rl.bottleneck}")
+    print(f"useful_flops_ratio={rl.useful_flops_ratio:.3f} "
+          f"roofline_fraction={rl.roofline_fraction:.4f}")
+    print(f"peak HBM/dev ~ {(getattr(mem,'argument_size_in_bytes',0)+getattr(mem,'temp_size_in_bytes',0))/2**30:.1f} GiB "
+          f"(args {getattr(mem,'argument_size_in_bytes',0)/2**30:.1f} + temp {getattr(mem,'temp_size_in_bytes',0)/2**30:.1f})")
+
+    # per-op attribution with loop multipliers
+    model = HloCostModel(text)
+    colls, movers, dots = [], [], []
+
+    def walk(comp, mult, seen):
+        for inst in model.comps.get(comp, []):
+            line = inst.line
+            if inst.op == "while":
+                mb = re.search(r"body=%?([\w.\-]+)", line)
+                mt = re.search(r'"known_trip_count":\{"n":"(\d+)"\}', line)
+                trip = int(mt.group(1)) if mt else 1
+                if mb:
+                    walk(mb.group(1), mult * trip, seen)
+                continue
+            if inst.op in ("fusion", "call"):
+                mc = re.search(r"calls=%?([\w.\-]+)", line)
+                if mc and mc.group(1) in model.comps:
+                    walk(mc.group(1), mult, seen)
+            c = model.inst_cost(comp, inst, True)
+            meta = re.search(r'op_name="([^"]+)"', line)
+            tag = meta.group(1)[-90:] if meta else inst.name
+            if c.coll_bytes:
+                colls.append((c.coll_bytes * mult, inst.op, inst.shape[:60], tag))
+            if c.bytes:
+                movers.append((c.bytes * mult, inst.op, inst.shape[:60], tag))
+            if inst.op == "dot" and c.flops:
+                dots.append((c.flops * mult, inst.op, inst.shape[:60], tag))
+
+    walk(model.entry, 1.0, set())
+    for title, rowsrc, unit in [("collectives", colls, "GiB"),
+                                ("memory movers", movers, "GiB"),
+                                ("dots", dots, "GFLOP")]:
+        print(f"\n== top {title} (per device, loop-weighted) ==")
+        rowsrc.sort(reverse=True)
+        for v, op, shp, tag in rowsrc[: args.topk]:
+            val = v / 2**30 if unit == "GiB" else v / 1e9
+            print(f"  {val:12.2f} {unit}  {op:20s} {shp:60s} {tag}")
+
+
+if __name__ == "__main__":
+    main()

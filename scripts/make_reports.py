@@ -1,0 +1,84 @@
+"""Generate EXPERIMENTS.md SSDry-run / SSRoofline tables from results/*.json.
+
+  PYTHONPATH=src python scripts/make_reports.py results/dryrun_single.json \\
+      [results/dryrun_multi.json ...] > results/roofline_tables.md
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+
+def fmt_bytes(b):
+    if b is None:
+        return "-"
+    for unit in ("B", "KiB", "MiB", "GiB", "TiB"):
+        if abs(b) < 1024:
+            return f"{b:.1f}{unit}"
+        b /= 1024
+    return f"{b:.1f}PiB"
+
+
+def fmt_s(x):
+    if x is None:
+        return "-"
+    if x >= 1:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x*1e3:.1f}ms"
+    return f"{x*1e6:.0f}us"
+
+
+def main(paths):
+    records = []
+    for p in paths:
+        with open(p) as f:
+            records.extend(json.load(f))
+
+    print("### Dry-run (lower + compile, per cell)\n")
+    print("| arch | shape | mesh | status | compile | per-dev peak HBM | args |")
+    print("|---|---|---|---|---|---|---|")
+    for r in records:
+        status = r["status"]
+        if status.startswith("skipped"):
+            print(f"| {r['arch']} | {r['shape']} | {r['mesh']} | skip (long_500k "
+                  f"needs sub-quadratic attn) | - | - | - |")
+            continue
+        if status != "ok":
+            print(f"| {r['arch']} | {r['shape']} | {r['mesh']} | **FAILED** | - | - | - |")
+            continue
+        print(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | ok | {r['compile_s']}s "
+            f"| {fmt_bytes(r.get('peak_bytes'))} | {fmt_bytes(r.get('argument_bytes'))} |"
+        )
+
+    print("\n### Roofline (per-device terms, seconds/step; v5e constants)\n")
+    print("| arch | shape | mesh | t_compute | t_memory | t_collective | bottleneck "
+          "| MODEL_FLOPS/HLO | roofline frac |")
+    print("|---|---|---|---|---|---|---|---|---|")
+    for r in records:
+        if r["status"] != "ok":
+            continue
+        print(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | {fmt_s(r['t_compute'])} "
+            f"| {fmt_s(r['t_memory'])} | {fmt_s(r['t_collective'])} "
+            f"| **{r['bottleneck']}** | {r['useful_flops_ratio']:.3f} "
+            f"| {r['roofline_fraction']:.3f} |"
+        )
+
+    print("\n### Collective mix (per-device bytes by op)\n")
+    print("| arch | shape | mesh | total | mix |")
+    print("|---|---|---|---|---|")
+    for r in records:
+        if r["status"] != "ok" or not r.get("collective_by_type"):
+            continue
+        mix = ", ".join(
+            f"{k}:{fmt_bytes(v)}" for k, v in sorted(
+                r["collective_by_type"].items(), key=lambda kv: -kv[1])
+        )
+        print(f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+              f"| {fmt_bytes(r['collective_bytes_per_device'])} | {mix} |")
+
+
+if __name__ == "__main__":
+    main(sys.argv[1:] or ["results/dryrun_single.json"])

@@ -1,0 +1,2 @@
+"""repro.checkpoint — CDC-deduplicated fault-tolerant checkpointing."""
+from .store import CheckpointManager  # noqa: F401

@@ -1,0 +1,60 @@
+"""Architecture registry: the 10 assigned configs + the paper's own pipeline.
+
+``get_config(name)`` returns the exact public config; ``get_reduced(name)``
+returns the family-preserving smoke variant used by CPU tests.
+"""
+from __future__ import annotations
+
+import importlib
+from typing import Dict
+
+from .base import (  # noqa: F401
+    SHAPES,
+    SUBQUADRATIC,
+    ModelConfig,
+    ShapeConfig,
+    param_count,
+    shape_applicable,
+)
+
+_MODULES: Dict[str, str] = {
+    "qwen3-moe-30b-a3b": "qwen3_moe_30b_a3b",
+    "deepseek-v3-671b": "deepseek_v3_671b",
+    "phi3-medium-14b": "phi3_medium_14b",
+    "llama3.2-1b": "llama32_1b",
+    "qwen2-72b": "qwen2_72b",
+    "granite-8b": "granite_8b",
+    "musicgen-large": "musicgen_large",
+    "llava-next-34b": "llava_next_34b",
+    "xlstm-125m": "xlstm_125m",
+    "recurrentgemma-2b": "recurrentgemma_2b",
+}
+
+ARCHS = tuple(_MODULES)
+
+
+def _module(name: str):
+    try:
+        mod = _MODULES[name]
+    except KeyError:
+        raise KeyError(f"unknown arch {name!r}; available: {list(_MODULES)}") from None
+    return importlib.import_module(f"repro.configs.{mod}")
+
+
+def get_config(name: str) -> ModelConfig:
+    return _module(name).CONFIG
+
+
+def get_reduced(name: str) -> ModelConfig:
+    return _module(name).reduced()
+
+
+def cells(include_inapplicable: bool = False):
+    """All (arch, shape) dry-run cells — 40 assigned, minus long_500k skips."""
+    out = []
+    for arch in ARCHS:
+        cfg = get_config(arch)
+        for shape in SHAPES.values():
+            if include_inapplicable or shape_applicable(cfg, shape):
+                out.append((arch, shape.name))
+    return out

@@ -1,0 +1,17 @@
+"""repro.core — SeqCDC (the paper's contribution) and the CDC algorithm zoo."""
+from .params import (  # noqa: F401
+    DECREASING,
+    INCREASING,
+    SeqCDCParams,
+    derived_params,
+    paper_params,
+)
+from .chunker import Chunker, available, make_chunker, register  # noqa: F401
+from .seqcdc import (  # noqa: F401
+    boundaries_batch,
+    boundaries_sequential,
+    boundaries_two_phase,
+)
+
+# Import baselines for registry side effects.
+from . import baselines as _baselines  # noqa: F401,E402

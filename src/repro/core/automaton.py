@@ -1,0 +1,293 @@
+"""Phase 2 of SeqCDC-TPU: the W-block boundary-selection automaton.
+
+Consumes the candidate/opposing bitmaps from phase 1 (core/masks.py or the
+Pallas kernel) and resolves chunk boundaries with a ``lax.scan`` over W-byte
+blocks.  Correctness rests on the invariant proved in DESIGN.md SS4: with
+``W <= min(SkipSize, min_size - SeqLength)`` every event (candidate boundary,
+skip trigger, max-size/file-end cut) advances the scan position past the
+current block, so at most one event fires per block and the in-block scan
+reduces to::
+
+    first candidate >= offset       -> masked argmin      (the paper's ffs)
+    first pair where carry+cumsum(opposing) > SkipTrigger  (the paper's
+                                     popcnt/pdep/tzcnt)   -> masked argmin
+    max-size / file-end cut position -> scalar arithmetic
+
+Two step implementations are provided:
+
+* ``wide``  — O(W) vector work per block (baseline; direct transcription).
+* ``gather`` — O(1) gathers per block against tables precomputed in parallel
+  over all blocks (cumsum / next-candidate / m-th-opposing-position).  This is
+  the beyond-paper optimization logged in EXPERIMENTS.md SSPerf: the serial
+  phase does constant work per block, pushing the whole pipeline to the
+  bandwidth of phase 1.
+
+Both are bit-identical to the oracle (tests/test_seqcdc_equivalence.py).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+
+from .params import SeqCDCParams
+
+_BIG = jnp.int32(1 << 30)
+
+
+def max_chunks_for(n: int, p: SeqCDCParams) -> int:
+    """Upper bound on the number of chunks for an n-byte stream (+1 fixup slot)."""
+    return max(1, n // p.min_size + 2)
+
+
+def _padded_blocks(cand: jax.Array, opp: jax.Array, n: int, p: SeqCDCParams):
+    """Pad bitmaps past n so every event fires inside the scan (DESIGN.md SS4).
+
+    Scan positions never exceed ``cut_k + SkipSize`` for any chunk, and the
+    final cut fires at position < n + SkipSize; padding by SkipSize + W rounded
+    to a W multiple captures every event.
+    """
+    W = p.block_width
+    n_pad = ((n + p.skip_size + W) + W - 1) // W * W
+    pad = n_pad - n
+    cand = jnp.pad(cand, (0, pad))
+    opp = jnp.pad(opp, (0, pad))
+    return cand.reshape(-1, W), opp.reshape(-1, W)
+
+
+def _resolve(k, c, s, kc, kt, bend, in_block, n, p: SeqCDCParams):
+    """Shared event-resolution logic given first-candidate kc / trigger kt."""
+    L = p.seq_length
+    cut_b = jnp.minimum(s + p.max_size, n)
+    cut_k = cut_b - (L - 1)  # first scan position that cuts
+    e_cut = jnp.maximum(cut_k, k)
+    fire_cut = in_block & (e_cut < bend) & (e_cut <= jnp.minimum(kc, kt))
+    fire_cand = in_block & ~fire_cut & (kc < kt)
+    fire_trig = in_block & ~fire_cut & ~fire_cand & (kt < _BIG)
+    bound_cand = kc + L
+    new_s = jnp.where(fire_cut, cut_b, jnp.where(fire_cand, bound_cand, s))
+    new_k = jnp.where(
+        fire_cut,
+        cut_b + p.sub_min_skip,
+        jnp.where(
+            fire_cand,
+            bound_cand + p.sub_min_skip,
+            jnp.where(fire_trig, kt + p.skip_size, jnp.where(in_block, bend, k)),
+        ),
+    )
+    emit = fire_cut | fire_cand
+    bound = jnp.where(fire_cut, cut_b, bound_cand)
+    any_event = fire_cut | fire_cand | fire_trig
+    return new_k, new_s, emit, bound, any_event
+
+
+def _scan_wide(candb, oppb, n, p: SeqCDCParams):
+    """Baseline step: O(W) vector ops per block."""
+    W = p.block_width
+    nb = candb.shape[0]
+    iota = jnp.arange(W, dtype=jnp.int32)
+    T = jnp.int32(p.skip_trigger)
+
+    def step(state, xs):
+        k, c, s = state
+        cb, ob, bstart = xs
+        bend = bstart + W
+        in_block = (k < bend) & (s < n)
+        o = jnp.maximum(k - bstart, 0)
+        active = iota >= o
+        pos = bstart + iota
+        kc = jnp.min(jnp.where(cb & active, pos, _BIG))
+        cum = c + jnp.cumsum((ob & active).astype(jnp.int32))
+        kt = jnp.min(jnp.where(ob & active & (cum > T), pos, _BIG))
+        new_k, new_s, emit, bound, any_event = _resolve(
+            k, c, s, kc, kt, bend, in_block, n, p
+        )
+        new_c = jnp.where(any_event, 0, jnp.where(in_block, cum[-1], c))
+        return (new_k, new_c, new_s), (emit, bound)
+
+    init = (jnp.int32(p.sub_min_skip), jnp.int32(0), jnp.int32(0))
+    bstarts = jnp.arange(nb, dtype=jnp.int32) * W
+    _, (emits, bounds) = jax.lax.scan(step, init, (candb, oppb, bstarts))
+    return emits, bounds
+
+
+def _scan_gather(candb, oppb, n, p: SeqCDCParams):
+    """Optimized step: O(1) gathers per block.
+
+    Parallel precompute (vectorized over all blocks, runs on the VPU):
+      * ``opp_pref``  (nb, W) inclusive prefix sums of the opposing bitmap;
+      * ``next_cand`` (nb, W) position of the first candidate at index >= j
+        (reverse cumulative min of masked iota);
+      * ``mth_opp``   (nb, W) position of the m-th (1-indexed) opposing pair.
+    The scan step then resolves events with 4 dynamic gathers.
+    """
+    W = p.block_width
+    nb = candb.shape[0]
+    iota = jnp.arange(W, dtype=jnp.int32)
+    T = jnp.int32(p.skip_trigger)
+
+    # -- parallel tables ---------------------------------------------------
+    opp_i32 = oppb.astype(jnp.int32)
+    opp_pref = jnp.cumsum(opp_i32, axis=-1)  # (nb, W) inclusive
+    opp_total = opp_pref[:, -1]  # (nb,)
+
+    masked = jnp.where(candb, iota, _BIG)
+    # reverse cummin -> first candidate index >= j
+    next_cand = jnp.flip(
+        jax.lax.associative_scan(jnp.minimum, jnp.flip(masked, axis=-1), axis=-1),
+        axis=-1,
+    )  # (nb, W), value in [0, W) or _BIG
+
+    # mth_opp[b, m-1] = index of the m-th opposing pair in block b (or _BIG)
+    ranks = jnp.where(oppb, opp_pref - 1, _BIG)  # 0-indexed rank at each set bit
+    mth_opp = jnp.full((nb, W), _BIG, dtype=jnp.int32)
+    mth_opp = mth_opp.at[jnp.arange(nb)[:, None], jnp.clip(ranks, 0, W - 1)].min(
+        jnp.where(oppb, iota, _BIG), mode="drop"
+    )
+
+    def step(state, xs):
+        k, c, s = state
+        next_cand_b, opp_pref_b, mth_opp_b, opp_total_b, bstart = xs
+        bend = bstart + W
+        in_block = (k < bend) & (s < n)
+        o = jnp.clip(k - bstart, 0, W - 1)
+        # first candidate >= o
+        kc_rel = next_cand_b[o]
+        kc = jnp.where(kc_rel < _BIG, bstart + kc_rel, _BIG)
+        # trigger: first pair with carry + (pref[j] - pref_before_o) > T
+        pref_before = jnp.where(o > 0, opp_pref_b[o - 1], 0)
+        m = (T - c) + pref_before  # 0-indexed rank of the exceeding pair
+        m_clipped = jnp.clip(m, 0, W - 1)
+        kt_rel = jnp.where(m < W, mth_opp_b[m_clipped], _BIG)
+        kt = jnp.where((kt_rel < _BIG) & (kt_rel >= o), bstart + kt_rel, _BIG)
+        new_k, new_s, emit, bound, any_event = _resolve(
+            k, c, s, kc, kt, bend, in_block, n, p
+        )
+        c_pass = c + opp_total_b - pref_before
+        new_c = jnp.where(any_event, 0, jnp.where(in_block, c_pass, c))
+        return (new_k, new_c, new_s), (emit, bound)
+
+    init = (jnp.int32(p.sub_min_skip), jnp.int32(0), jnp.int32(0))
+    bstarts = jnp.arange(nb, dtype=jnp.int32) * W
+    _, (emits, bounds) = jax.lax.scan(
+        step, init, (next_cand, opp_pref, mth_opp, opp_total, bstarts)
+    )
+    return emits, bounds
+
+
+def _scan_event(cand, opp, n, p: SeqCDCParams, max_chunks: int):
+    """Event-driven step: O(#chunks + #skips) sequential iterations.
+
+    Beyond-paper optimization (EXPERIMENTS.md SSPerf): instead of scanning
+    W-byte blocks (n/W sequential steps), precompute two inclusive prefix
+    sums — candidates and opposing pairs — and let a ``lax.while_loop`` jump
+    straight from event to event:
+
+      next candidate >= k   = searchsorted(cand_pref, cand_pref[k-1] + 1)
+      trigger position      = searchsorted(opp_pref,  opp_pref[k-1] + T - c + 1)
+
+    Sequential steps drop from n/W (e.g. 16384 for 8 MiB at W=512) to the
+    event count (~2.5 k for 8 MiB at 8 KiB chunks) and each step is O(log n)
+    — the same semantics as the paper's scalar loop, with all O(n) work in
+    the two parallel prefix sums.  Bit-identical to the oracle (tested).
+    """
+    L = p.seq_length
+    T = jnp.int32(p.skip_trigger)
+    # exclusive prefix sums, length n+1: pref[k] = count in positions < k
+    cand_pref = jnp.concatenate(
+        [jnp.zeros(1, jnp.int32), jnp.cumsum(cand.astype(jnp.int32))]
+    )
+    opp_pref = jnp.concatenate(
+        [jnp.zeros(1, jnp.int32), jnp.cumsum(opp.astype(jnp.int32))]
+    )
+    total_cand = cand_pref[-1]
+    total_opp = opp_pref[-1]
+
+    def cond(st):
+        k, c, s, cnt, out = st
+        return (s < n) & (cnt < max_chunks)
+
+    def body(st):
+        k, c, s, cnt, out = st
+        kk = jnp.clip(k, 0, n)
+        cut_b = jnp.minimum(s + p.max_size, n)
+        cut_k = cut_b - (L - 1)
+        # first candidate at position >= k
+        rank_c = cand_pref[kk]
+        kc = jnp.where(
+            rank_c < total_cand,
+            jnp.searchsorted(cand_pref, rank_c + 1, side="left") - 1,
+            _BIG,
+        )
+        # first opposing pair (at >= k) whose running count exceeds T
+        rank_o = opp_pref[kk]
+        want = rank_o + (T - c) + 1
+        kt = jnp.where(
+            want <= total_opp,
+            jnp.searchsorted(opp_pref, want, side="left") - 1,
+            _BIG,
+        )
+        e_cut = jnp.maximum(cut_k, k)
+        fire_cut = (e_cut <= jnp.minimum(kc, kt))
+        fire_cand = ~fire_cut & (kc < kt)
+        bound = jnp.where(fire_cut, cut_b, kc + L)
+        emit = fire_cut | fire_cand
+        out = out.at[jnp.where(emit, cnt, max_chunks)].set(bound, mode="drop")
+        cnt = cnt + emit.astype(jnp.int32)
+        new_s = jnp.where(emit, bound, s)
+        new_k = jnp.where(emit, bound + p.sub_min_skip, kt + p.skip_size)
+        new_c = jnp.int32(0)  # every event resets the counter
+        return (new_k, new_c, new_s, cnt, out)
+
+    out0 = jnp.full((max_chunks,), _BIG, dtype=jnp.int32)
+    init = (jnp.int32(p.sub_min_skip), jnp.int32(0), jnp.int32(0), jnp.int32(0), out0)
+    _, _, _, cnt, out = jax.lax.while_loop(cond, body, init)
+    return out, cnt
+
+
+def select_boundaries(
+    cand: jax.Array,
+    opp: jax.Array,
+    n: int,
+    p: SeqCDCParams,
+    *,
+    step_impl: Literal["wide", "gather", "event"] = "wide",
+    max_chunks: int | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """Resolve chunk boundaries from bitmaps.
+
+    Returns ``(bounds, count)``: ``bounds`` is ``(max_chunks,)`` int32 of
+    exclusive end offsets (sentinel ``1<<30`` past ``count``), sorted
+    ascending, last real entry == n.
+    """
+    if max_chunks is None:
+        max_chunks = max_chunks_for(n, p)
+    if step_impl == "event":
+        out, count = _scan_event(cand, opp, n, p, max_chunks)
+        # fix-up: guarantee the final boundary n (while_loop emits it via the
+        # cut path, but an n == 0 stream emits nothing)
+        last = jnp.where(count > 0, out[jnp.maximum(count - 1, 0)], 0)
+        need = (last < n) & (n > 0)
+        out = out.at[jnp.where(need, count, max_chunks)].set(n, mode="drop")
+        return out, count + need.astype(jnp.int32)
+    candb, oppb = _padded_blocks(cand, opp, n, p)
+    if step_impl == "wide":
+        emits, bounds = _scan_wide(candb, oppb, n, p)
+    elif step_impl == "gather":
+        emits, bounds = _scan_gather(candb, oppb, n, p)
+    else:
+        raise ValueError(step_impl)
+    count = jnp.sum(emits.astype(jnp.int32))
+    idx = jnp.cumsum(emits.astype(jnp.int32)) - 1
+    out = jnp.full((max_chunks,), _BIG, dtype=jnp.int32)
+    out = out.at[jnp.where(emits, idx, max_chunks)].set(
+        bounds.astype(jnp.int32), mode="drop"
+    )
+    # fix-up: guarantee the final boundary n (no-op when already emitted)
+    last = jnp.where(count > 0, out[jnp.maximum(count - 1, 0)], 0)
+    need = (last < n) & (n > 0)
+    out = out.at[jnp.where(need, count, max_chunks)].set(n, mode="drop")
+    count = count + need.astype(jnp.int32)
+    return out, count

@@ -1,0 +1,8 @@
+"""CDC baseline algorithms (paper SSVI "Alternatives").
+
+Importing this package registers every baseline with core.chunker's registry:
+fixed (XC), gear[_seq], crc[_seq], rabin[_seq], fastcdc[_seq], tttd,
+ae[_seq], ram[_seq] — plus seqcdc variants registered by core.chunker itself.
+"""
+from . import hash_based, hashless  # noqa: F401
+from . import linear_hash, selectors  # noqa: F401

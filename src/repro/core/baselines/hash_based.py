@@ -1,0 +1,366 @@
+"""Hash-based CDC baselines: GEAR, CRC, RC (Rabin), FastCDC, TTTD.
+
+Each algorithm ships in two substrates (paper SSVI "Alternatives"):
+
+* ``<name>_seq`` — *native*: one ``lax.scan`` step per byte carrying the
+  rolling register, the paper's unaccelerated scalar loop.
+* ``<name>``     — *vectorized*: position-independent hash bitmap computed in
+  bulk (per-offset-table window sum / Pallas Gear kernel), boundaries selected
+  by the shared automaton — the SS-CDC two-stage design adapted to TPU.
+
+Both substrates share one hash definition (continuous over the stream, no
+per-chunk reset; identical to reset semantics once the window washes out,
+which min_size >= window guarantees) so they are bit-identical — tested.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import numpy as np
+
+from ..chunker import Chunker, register
+from . import linear_hash as lh
+from . import selectors
+
+
+def _bits_for(avg_size: int) -> int:
+    return int(round(math.log2(avg_size)))
+
+
+# ---------------------------------------------------------------------------
+# native per-byte scan (shared)
+# ---------------------------------------------------------------------------
+
+
+def _scan_native(
+    data_np, window: int, update, match, min_size: int, max_size: int, cache=None
+):
+    """Generic per-byte lax.scan chunker.  update(h,b_in,b_out); match(h,rel).
+
+    ``cache`` (a dict owned by the chunker instance) memoizes the jitted scan
+    per input length so repeated calls hit the jit cache.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    n = int(data_np.size)
+    run = cache.get(n) if cache is not None else None
+    if run is None:
+
+        @jax.jit
+        def run(d8):
+            d32 = d8.astype(jnp.int32)
+            idx = jnp.arange(n)
+            b_out = jnp.where(idx >= window, jnp.roll(d32, window), 0)
+
+            def step(st, xs):
+                h, rel = st
+                bi, bo = xs
+                h = update(h, bi, bo)
+                rel = rel + 1
+                end = (match(h, rel) & (rel >= min_size)) | (rel >= max_size)
+                rel = jnp.where(end, 0, rel)
+                return (h, rel), end
+
+            (_, _), ends = jax.lax.scan(
+                step, (jnp.uint32(0), jnp.int32(0)), (d32, b_out)
+            )
+            return ends
+
+        if cache is not None:
+            cache[n] = run
+
+    ends = np.asarray(run(jnp.asarray(data_np)))
+    bounds = (np.flatnonzero(ends) + 1).astype(np.int64)
+    if bounds.size == 0 or bounds[-1] != n:
+        bounds = np.concatenate([bounds, [n]])
+    return bounds
+
+
+# ---------------------------------------------------------------------------
+# GEAR
+# ---------------------------------------------------------------------------
+
+
+@register("gear")
+class GearChunker(Chunker):
+    """Gear chunking, vectorized (window-32 parallel hash + automaton)."""
+
+    name = "gear"
+
+    def __init__(self, avg_size=8192, use_pallas: bool = False,
+                 mask_bits: int | None = None, **_):
+        super().__init__(avg_size)
+        bits = mask_bits or _bits_for(avg_size)
+        self.mask_bits = bits
+        self.mask = np.uint32(((1 << bits) - 1) << (32 - bits))  # high bits
+        self.use_pallas = use_pallas
+
+    def _bitmap(self, data):
+        import jax.numpy as jnp
+
+        if self.use_pallas:
+            from repro.kernels import ops
+
+            h = ops.gear_hash(jnp.asarray(data))
+        else:
+            from repro.kernels import ref
+
+            h = ref.gear_hash_parallel(jnp.asarray(data))
+        return (h & jnp.uint32(self.mask)) == 0
+
+    def _boundaries(self, data):
+        import jax.numpy as jnp
+
+        bitmap = self._bitmap(data)
+        bounds, count = selectors.select_jax(
+            bitmap, int(data.size), self.min_size, self.max_size
+        )
+        return np.asarray(bounds)[: int(count)]
+
+
+@register("gear_seq")
+class GearSeqChunker(GearChunker):
+    """Gear chunking, native per-byte scan."""
+
+    name = "gear_seq"
+
+    def _boundaries(self, data):
+        import jax.numpy as jnp
+        from repro.kernels.ref import gear_table
+
+        table = gear_table()
+        mask = jnp.uint32(self.mask)
+
+        def update(h, bi, bo):
+            return (h << 1) + table[bi]
+
+        def match(h, rel):
+            return (h & mask) == 0
+
+        return _scan_native(data, 0, update, match, self.min_size, self.max_size,
+                             self.__dict__.setdefault('_scan_cache', {}))
+
+
+# ---------------------------------------------------------------------------
+# CRC and Rabin (windowed linear hashes)
+# ---------------------------------------------------------------------------
+
+
+class _WindowedChunker(Chunker):
+    WINDOW = 32
+
+    def __init__(self, avg_size=8192, backend: str = "numpy",
+                 mask_bits: int | None = None, **_):
+        super().__init__(avg_size)
+        bits = mask_bits or _bits_for(avg_size)
+        self.mask_bits = bits
+        self.mask = np.uint32((1 << bits) - 1)  # low bits (paper SSII-A)
+        self.backend = backend
+
+    def _tables(self) -> np.ndarray:
+        raise NotImplementedError
+
+    def _boundaries(self, data):
+        if self.backend == "numpy":
+            h = lh.windowed_hash_np(data, self._tables())
+            pos = np.flatnonzero((h & self.mask) == 0)
+            return selectors.select_numpy(
+                pos, int(data.size), self.min_size, self.max_size
+            )
+        import jax.numpy as jnp
+
+        h = lh.windowed_hash_jnp(jnp.asarray(data), self._tables())
+        bitmap = (h & jnp.uint32(self.mask)) == 0
+        bounds, count = selectors.select_jax(
+            bitmap, int(data.size), self.min_size, self.max_size
+        )
+        return np.asarray(bounds)[: int(count)]
+
+
+@register("crc")
+class CRCChunker(_WindowedChunker):
+    name = "crc"
+    WINDOW = lh.CRC_WINDOW
+
+    def _tables(self):
+        return lh.crc_tables(self.WINDOW)
+
+
+@register("rabin")
+class RabinChunker(_WindowedChunker):
+    name = "rabin"
+    WINDOW = lh.RABIN_WINDOW
+
+    def _tables(self):
+        return lh.rabin_tables(self.WINDOW)
+
+
+@register("crc_seq")
+class CRCSeqChunker(CRCChunker):
+    """CRC chunking, native rolling scan (byte-step + windowed removal)."""
+
+    name = "crc_seq"
+
+    def _boundaries(self, data):
+        import jax.numpy as jnp
+
+        tables = self._tables()
+        base = jnp.asarray(lh.crc_byte_table())
+        t0 = jnp.asarray(tables[0])
+        # removal table: contribution of the byte at offset WINDOW after the
+        # x^8 step == zero-extend tables[-1] one more byte.
+        last = tables[-1]
+        t_out = jnp.asarray(
+            ((last << 8) & 0xFFFFFFFF) ^ lh.crc_byte_table()[(last >> 24) & 0xFF]
+        )
+        mask = jnp.uint32(self.mask)
+
+        def update(h, bi, bo):
+            h = ((h << 8) & jnp.uint32(0xFFFFFFFF)) ^ base[(h >> 24) & 0xFF]
+            return h ^ t0[bi] ^ t_out[bo]
+
+        def match(h, rel):
+            return (h & mask) == 0
+
+        return _scan_native(
+            data, self.WINDOW, update, match, self.min_size, self.max_size,
+            self.__dict__.setdefault('_scan_cache', {}),
+        )
+
+
+@register("rabin_seq")
+class RabinSeqChunker(RabinChunker):
+    """Rabin chunking, native rolling scan (x^8 multiply + removal)."""
+
+    name = "rabin_seq"
+
+    def _boundaries(self, data):
+        import jax.numpy as jnp
+
+        tables = self._tables()
+        red8 = jnp.asarray(lh.rabin_red8())
+        t0 = jnp.asarray(tables[0])
+        last = tables[-1]
+        # removal: (v * x^(8*WINDOW)) mod P = x^8-step of tables[-1]
+        t_out_np = np.zeros(256, dtype=np.uint32)
+        for v in range(256):
+            t_out_np[v] = lh._gf2_mod(int(last[v]) << 8, lh.RABIN_POLY, 31)
+        t_out = jnp.asarray(t_out_np)
+        mask = jnp.uint32(self.mask)
+
+        def update(h, bi, bo):
+            h31 = ((h << 8) & jnp.uint32(0x7FFFFFFF)) ^ red8[(h >> 23) & 0xFF]
+            return h31 ^ t0[bi] ^ t_out[bo]
+
+        def match(h, rel):
+            return (h & mask) == 0
+
+        return _scan_native(
+            data, self.WINDOW, update, match, self.min_size, self.max_size,
+            self.__dict__.setdefault('_scan_cache', {}),
+        )
+
+
+# ---------------------------------------------------------------------------
+# FastCDC (gear + sub-minimum skipping + 2-level normalization)
+# ---------------------------------------------------------------------------
+
+
+@register("fastcdc")
+class FastCDCChunker(Chunker):
+    """FastCDC NC=2, vectorized: gear bitmap x 2 masks + two-region select."""
+
+    name = "fastcdc"
+
+    def __init__(self, avg_size=8192, use_pallas: bool = False,
+                 mask_bits: int | None = None, **_):
+        super().__init__(avg_size)
+        bits = mask_bits or _bits_for(avg_size)
+        self.mask_bits = bits
+        self.mask_s = np.uint32(lh.spread_mask(bits + 2, seed=7))
+        self.mask_l = np.uint32(lh.spread_mask(max(bits - 2, 1), seed=11))
+        self.use_pallas = use_pallas
+
+    def _hash(self, data):
+        import jax.numpy as jnp
+
+        if self.use_pallas:
+            from repro.kernels import ops
+
+            return ops.gear_hash(jnp.asarray(data))
+        from repro.kernels import ref
+
+        return ref.gear_hash_parallel(jnp.asarray(data))
+
+    def _boundaries(self, data):
+        h = np.asarray(self._hash(data))
+        small = np.flatnonzero((h & self.mask_s) == 0)
+        large = np.flatnonzero((h & self.mask_l) == 0)
+        return selectors.select_two_region_numpy(
+            small, large, int(data.size), self.min_size, self.avg_size, self.max_size
+        )
+
+
+@register("fastcdc_seq")
+class FastCDCSeqChunker(FastCDCChunker):
+    """FastCDC, native per-byte scan (hash continuous; skips noted in docs)."""
+
+    name = "fastcdc_seq"
+
+    def _boundaries(self, data):
+        import jax.numpy as jnp
+        from repro.kernels.ref import gear_table
+
+        table = gear_table()
+        ms = jnp.uint32(self.mask_s)
+        ml = jnp.uint32(self.mask_l)
+        avg = self.avg_size
+
+        def update(h, bi, bo):
+            return (h << 1) + table[bi]
+
+        def match(h, rel):
+            small = ((h & ms) == 0) & (rel < avg)
+            large = ((h & ml) == 0) & (rel >= avg)
+            return small | large
+
+        return _scan_native(data, 0, update, match, self.min_size, self.max_size,
+                             self.__dict__.setdefault('_scan_cache', {}))
+
+
+# ---------------------------------------------------------------------------
+# TTTD (Rabin + backup divisor)
+# ---------------------------------------------------------------------------
+
+
+@register("tttd")
+class TTTDChunker(_WindowedChunker):
+    """TTTD, vectorized (primary + backup rabin divisors, backtracking select).
+
+    The backup-divisor backtrack re-scans bytes after a max-size cut, so TTTD
+    has no one-pass native scan; we ship the two-phase form only (native cost
+    ~= Rabin + one extra compare, see benchmarks notes).
+    """
+
+    name = "tttd"
+    WINDOW = lh.RABIN_WINDOW
+
+    def __init__(self, avg_size=8192, mask_bits: int | None = None, **kw):
+        super().__init__(avg_size, mask_bits=mask_bits, **kw)
+        bits = mask_bits or _bits_for(avg_size)
+        self.mask_bits = bits
+        self.mask = np.uint32((1 << bits) - 1)
+        self.mask_backup = np.uint32((1 << max(bits - 1, 1)) - 1)
+
+    def _tables(self):
+        return lh.rabin_tables(self.WINDOW)
+
+    def _boundaries(self, data):
+        h = lh.windowed_hash_np(data, self._tables())
+        primary = np.flatnonzero((h & self.mask) == 0)
+        backup = np.flatnonzero((h & self.mask_backup) == 0)
+        return selectors.select_tttd_numpy(
+            primary, backup, int(data.size), self.min_size, self.max_size
+        )

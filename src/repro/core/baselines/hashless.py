@@ -1,0 +1,206 @@
+"""Hashless CDC baselines: AE (Asymmetric Extremum) and RAM.
+
+Native variants are one-pass per-byte ``lax.scan`` automatons; vectorized
+variants use the VectorCDC decomposition (DESIGN.md SS2): strict prefix maxima
+give the extreme-point sequence directly, so
+
+  * AE boundary  = first strict prefix-maximum p whose *next* strict maximum
+    is more than ``w`` bytes away (no byte in (p, p+w] exceeds it);
+  * RAM boundary = first byte >= max(first-w-byte window) past the window,
+
+both of which are bulk array operations.  The Pallas ``block_max`` kernel
+(kernels/extremum.py) provides the per-block maxima used to skip cold blocks
+in the JAX path.
+
+min-size handling (the paper applies min/max to all algorithms, SSVI): a
+boundary whose end would fall before ``s + min_size`` is *deferred* — it fires
+at ``s + min_size`` unless a new extreme (AE) supersedes it first.  Both
+substrates implement this identically (tested bit-equal).
+"""
+from __future__ import annotations
+
+import math
+
+import numpy as np
+
+from ..chunker import Chunker, register
+
+_E_FACTOR = math.e / (math.e - 1.0)  # AE: E[chunk] ~ w * e/(e-1) on random data
+
+
+def _ae_window(avg_size: int) -> int:
+    return max(64, int(round(avg_size / _E_FACTOR)))
+
+
+def _ram_window(avg_size: int) -> int:
+    # RAM: E[chunk] ~ w + E[geom] ~ w + 256 for large windows on random data
+    return max(64, avg_size - 256)
+
+
+class _HashlessBase(Chunker):
+    def __init__(self, avg_size=8192, window: int | None = None, **_):
+        super().__init__(avg_size)
+        self.window = window or self._default_window(avg_size)
+
+    @staticmethod
+    def _default_window(avg_size: int) -> int:
+        raise NotImplementedError
+
+
+# ---------------------------------------------------------------------------
+# AE
+# ---------------------------------------------------------------------------
+
+
+@register("ae")
+class AEChunker(_HashlessBase):
+    """AE, vectorized via strict prefix maxima (VectorCDC extreme-search)."""
+
+    name = "ae"
+    _default_window = staticmethod(_ae_window)
+
+    def _boundaries(self, data):
+        n = int(data.size)
+        w = self.window
+        bounds = []
+        s = 0
+        while s < n:
+            cut = min(s + self.max_size, n)
+            seg = data[s:cut].astype(np.int32)
+            pm = np.maximum.accumulate(seg)
+            prev = np.concatenate([[-1], pm[:-1]])
+            ext = np.flatnonzero(seg > prev)  # strict prefix maxima positions
+            nxt = np.concatenate([ext[1:], [1 << 30]])
+            t = np.maximum(ext + w, self.min_size - 1)  # deferred fire time
+            ok = (nxt > t) & (t + 1 <= cut - s)
+            hit = np.flatnonzero(ok)
+            if hit.size:
+                bounds.append(s + int(t[hit[0]]) + 1)
+            else:
+                bounds.append(cut)
+            s = bounds[-1]
+        return np.asarray(bounds, dtype=np.int64)
+
+
+@register("ae_seq")
+class AESeqChunker(AEChunker):
+    """AE, native one-pass per-byte scan."""
+
+    name = "ae_seq"
+
+    def _boundaries(self, data):
+        import jax
+        import jax.numpy as jnp
+
+        n = int(data.size)
+        w = self.window
+        mn, mx = self.min_size, self.max_size
+        cache = self.__dict__.setdefault("_scan_cache", {})
+        run = cache.get(n)
+        if run is None:
+
+            @jax.jit
+            def run(d8):
+                d32 = d8.astype(jnp.int32)
+
+                def step(st, b):
+                    rel, ev, ep = st
+                    rel = rel + 1
+                    is_ext = b > ev
+                    ev = jnp.where(is_ext, b, ev)
+                    ep = jnp.where(is_ext, rel, ep)
+                    fire = (rel - ep >= w) & (rel + 1 >= mn)
+                    end = fire | (rel + 1 >= mx)
+                    rel = jnp.where(end, -1, rel)
+                    ev = jnp.where(end, -1, ev)
+                    ep = jnp.where(end, 0, ep)
+                    return (rel, ev, ep), end
+
+                init = (jnp.int32(-1), jnp.int32(-1), jnp.int32(0))
+                _, ends = jax.lax.scan(step, init, d32)
+                return ends
+
+            cache[n] = run
+        ends = np.asarray(run(np.asarray(data, dtype=np.uint8)))
+        bounds = (np.flatnonzero(ends) + 1).astype(np.int64)
+        if bounds.size == 0 or bounds[-1] != n:
+            bounds = np.concatenate([bounds, [n]])
+        return bounds
+
+
+# ---------------------------------------------------------------------------
+# RAM
+# ---------------------------------------------------------------------------
+
+
+@register("ram")
+class RAMChunker(_HashlessBase):
+    """RAM, vectorized: window max + first-exceed search (VectorCDC range scan)."""
+
+    name = "ram"
+    _default_window = staticmethod(_ram_window)
+
+    def _boundaries(self, data):
+        n = int(data.size)
+        w = self.window
+        bounds = []
+        s = 0
+        while s < n:
+            cut = min(s + self.max_size, n)
+            wend = min(s + w, cut)
+            m = int(data[s:wend].max()) if wend > s else 0
+            start = s + max(w, self.min_size - 1)
+            if start < cut:
+                seg = data[start:cut]
+                hits = np.flatnonzero(seg >= m)
+                if hits.size:
+                    bounds.append(start + int(hits[0]) + 1)
+                    s = bounds[-1]
+                    continue
+            bounds.append(cut)
+            s = cut
+        return np.asarray(bounds, dtype=np.int64)
+
+
+@register("ram_seq")
+class RAMSeqChunker(RAMChunker):
+    """RAM, native one-pass per-byte scan."""
+
+    name = "ram_seq"
+
+    def _boundaries(self, data):
+        import jax
+        import jax.numpy as jnp
+
+        n = int(data.size)
+        w = self.window
+        mn, mx = self.min_size, self.max_size
+        cache = self.__dict__.setdefault("_scan_cache", {})
+        run = cache.get(n)
+        if run is None:
+
+            @jax.jit
+            def run(d8):
+                d32 = d8.astype(jnp.int32)
+
+                def step(st, b):
+                    rel, m = st
+                    rel = rel + 1
+                    in_win = rel < w
+                    m = jnp.where(in_win, jnp.maximum(m, b), m)
+                    fire = (~in_win) & (b >= m) & (rel + 1 >= mn)
+                    end = fire | (rel + 1 >= mx)
+                    rel = jnp.where(end, -1, rel)
+                    m = jnp.where(end, 0, m)
+                    return (rel, m), end
+
+                init = (jnp.int32(-1), jnp.int32(0))
+                _, ends = jax.lax.scan(step, init, d32)
+                return ends
+
+            cache[n] = run
+        ends = np.asarray(run(np.asarray(data, dtype=np.uint8)))
+        bounds = (np.flatnonzero(ends) + 1).astype(np.int64)
+        if bounds.size == 0 or bounds[-1] != n:
+            bounds = np.concatenate([bounds, [n]])
+        return bounds

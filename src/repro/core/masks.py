@@ -1,0 +1,65 @@
+"""Candidate / opposing bitmap computation in JAX (phase 1 of SeqCDC-TPU).
+
+This is the data-parallel half of the paper's AVX-512 kernel (SSIII-D, Fig. 3),
+re-expressed for bulk execution: pairwise shifted compares -> masks M_1..M_{L-1}
+-> AND-reduction -> candidate bitmap; one opposite compare -> opposing bitmap.
+
+The canonical jnp implementation lives here; ``kernels/seqcdc_masks.py`` is the
+Pallas VMEM-tiled version and ``kernels/ref.py`` re-exports these functions as
+its oracle.  Shapes: input ``(..., n)`` uint8, outputs ``(..., n)`` bool.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .params import DECREASING, INCREASING
+
+
+def pair_masks(data: jax.Array, mode: str = INCREASING) -> tuple[jax.Array, jax.Array]:
+    """(forward, opposing) pair bitmaps of shape ``data.shape``.
+
+    ``forward[..., k]`` == pair (b[k], b[k+1]) ordered with the mode,
+    ``opposing[..., k]`` == ordered against it; index n-1 padded False.
+    """
+    if data.dtype != jnp.uint8:
+        data = data.astype(jnp.uint8)
+    cur = data[..., :-1]
+    nxt = data[..., 1:]
+    gt = nxt > cur
+    lt = nxt < cur
+    pad = [(0, 0)] * (data.ndim - 1) + [(0, 1)]
+    gt = jnp.pad(gt, pad)
+    lt = jnp.pad(lt, pad)
+    if mode == INCREASING:
+        return gt, lt
+    if mode == DECREASING:
+        return lt, gt
+    raise ValueError(mode)
+
+
+def candidate_mask(fwd: jax.Array, seq_length: int) -> jax.Array:
+    """AND of ``seq_length - 1`` consecutive forward-pair bits.
+
+    cand[..., k] == run of `seq_length` monotone bytes starts at k.  Equivalent
+    to the paper's M_1 & M_2 & ... mask combination; bit k indexes the run
+    *start* (paper Fig. 3).  Positions k > n - seq_length are False because
+    ``fwd`` is already False-padded at n-1 and we shift False in.
+    """
+    n = fwd.shape[-1]
+    acc = fwd
+    for j in range(1, seq_length - 1):
+        shifted = jnp.roll(fwd, -j, axis=-1)
+        # roll wraps; mask the wrapped tail to False
+        idx = jnp.arange(n)
+        shifted = jnp.where(idx < n - j, shifted, False)
+        acc = acc & shifted
+    return acc
+
+
+def seqcdc_masks(
+    data: jax.Array, seq_length: int, mode: str = INCREASING
+) -> tuple[jax.Array, jax.Array]:
+    """(candidate, opposing) bitmaps for SeqCDC.  Pure-jnp reference."""
+    fwd, opp = pair_masks(data, mode)
+    return candidate_mask(fwd, seq_length), opp

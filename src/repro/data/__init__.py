@@ -1,0 +1,4 @@
+"""repro.data — corpus synthesis, dedup ingest pipeline, batch loader."""
+from .corpus import container_corpus, load_dataset, snapshot_series, vm_image_like  # noqa: F401
+from .loader import LoaderConfig, TokenLoader  # noqa: F401
+from .pipeline import DedupIngest, PipelineConfig  # noqa: F401

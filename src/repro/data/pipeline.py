@@ -1,0 +1,111 @@
+"""Dedup ingest pipeline: the paper's technique as a training-data stage.
+
+Per-host flow (each data-parallel host runs this on its own corpus shard —
+chunking is embarrassingly parallel across shards, which is how the paper's
+single-node algorithm scales to a pod):
+
+    corpus shard -> [SeqCDC chunk] -> [fingerprint] -> [dedup filter]
+                 -> unique-chunk byte stream -> token batches
+
+Dedup before tokenization removes redundant training bytes (duplicate
+documents/backup copies), a real pretraining-pipeline concern.  The chunking
+and fingerprinting run batched on the accelerator (vmapped two-phase SeqCDC);
+the index is either host-local (:class:`FingerprintIndex`) or the distributed
+partition-by-hash index (dedup/dist_index.py) when a mesh is available.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator
+
+import numpy as np
+
+from repro.core import SeqCDCParams, derived_params
+from repro.core.automaton import max_chunks_for
+from repro.core.seqcdc import boundaries_batch
+from repro.dedup import FingerprintIndex, chunk_fingerprints
+
+
+@dataclasses.dataclass
+class PipelineConfig:
+    avg_chunk: int = 8192
+    segment_bytes: int = 1 << 20  # accelerator batch granularity
+    batch_segments: int = 8  # segments chunked per device dispatch
+    vocab_size: int = 256  # byte-level tokens by default
+    seq_len: int = 1024
+    batch_size: int = 8
+    drop_duplicates: bool = True
+
+
+class DedupIngest:
+    """Streaming dedup of a host corpus shard, accelerator-batched."""
+
+    def __init__(self, cfg: PipelineConfig, params: SeqCDCParams | None = None):
+        self.cfg = cfg
+        self.params = params or derived_params(cfg.avg_chunk)
+        self.index = FingerprintIndex()
+        self._jit_cache = {}
+
+    def _chunk_batch(self, segs: np.ndarray):
+        """segs: (B, S) uint8 -> (bounds, counts, fps, lens) numpy."""
+        import jax
+        import jax.numpy as jnp
+
+        B, S = segs.shape
+        key = (B, S)
+        fn = self._jit_cache.get(key)
+        if fn is None:
+            mc = max_chunks_for(S, self.params)
+
+            @jax.jit
+            def fn(x):
+                bounds, counts = boundaries_batch(x, self.params)
+                fps, lens = jax.vmap(
+                    lambda d, b, c: chunk_fingerprints(d, b, c, max_chunks=mc)
+                )(x, bounds, counts)
+                return bounds, counts, fps, lens
+
+            self._jit_cache[key] = fn
+        bounds, counts, fps, lens = fn(jnp.asarray(segs))
+        return (np.asarray(bounds), np.asarray(counts), np.asarray(fps),
+                np.asarray(lens))
+
+    def unique_bytes(self, corpus: np.ndarray) -> Iterator[np.ndarray]:
+        """Yield unique-chunk byte arrays from the corpus shard, in order."""
+        S = self.cfg.segment_bytes
+        B = self.cfg.batch_segments
+        n_seg = len(corpus) // S
+        tail = corpus[n_seg * S :]
+        for i in range(0, n_seg, B):
+            block = corpus[i * S : min((i + B) * S, n_seg * S)]
+            nb = len(block) // S
+            segs = block.reshape(nb, S)
+            bounds, counts, fps, lens = self._chunk_batch(segs)
+            for b in range(nb):
+                cnt = int(counts[b])
+                new = self.index.add_batch(fps[b, :cnt], lens[b, :cnt])
+                s = 0
+                for j in range(cnt):
+                    e = int(bounds[b, j])
+                    if new[j] or not self.cfg.drop_duplicates:
+                        yield segs[b, s:e]
+                    s = e
+        if tail.size:
+            if self.index.add((int(tail.sum()), len(tail)), len(tail)):
+                yield tail
+
+    def token_batches(self, corpus: np.ndarray) -> Iterator[np.ndarray]:
+        """Pack unique bytes into (batch, seq_len+1) uint8 LM batches."""
+        cfg = self.cfg
+        need = cfg.batch_size * (cfg.seq_len + 1)
+        buf = np.zeros(0, dtype=np.uint8)
+        for chunk in self.unique_bytes(corpus):
+            buf = np.concatenate([buf, chunk])
+            while len(buf) >= need:
+                batch = buf[:need].reshape(cfg.batch_size, cfg.seq_len + 1)
+                yield batch
+                buf = buf[need:]
+
+    @property
+    def savings(self) -> float:
+        return self.index.savings

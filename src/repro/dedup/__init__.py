@@ -1,0 +1,4 @@
+"""repro.dedup — fingerprints, dedup index, distributed index, block store."""
+from .fingerprint import chunk_fingerprints, fingerprints_numpy  # noqa: F401
+from .index import FingerprintIndex, dedup_stats, space_savings  # noqa: F401
+from .store import BlockStore, DirBlockStore, sha256_key  # noqa: F401

@@ -1,0 +1,87 @@
+"""Fingerprint comparison and space-savings accounting (paper SSII, Eq. 1).
+
+Two layers:
+
+* :func:`dedup_stats` — in-JAX: sort the (fp, length) table, mark first
+  occurrences, reduce.  Used by the accelerator-resident pipeline and the
+  benchmarks (space savings = 1 - deduplicated/original, Eq. 1).
+* :class:`FingerprintIndex` — host-side incremental index (dict) used by the
+  streaming ingest pipeline and the CDC checkpoint store, where chunks arrive
+  over time and persistence matters.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@jax.jit
+def dedup_stats(fp: jax.Array, lengths: jax.Array):
+    """Global dedup over a batch of chunk tables.
+
+    fp: (..., C, 2) uint32; lengths: (..., C) int32 (0 = padding).
+    Returns dict with original_bytes, dedup_bytes, unique_chunks, total_chunks.
+    """
+    f1 = fp[..., 0].reshape(-1)
+    f2 = fp[..., 1].reshape(-1)
+    ln = lengths.reshape(-1)
+    valid = ln > 0
+    # push padding to the end with an impossible key (real fps are < 2^31)
+    pad_key = jnp.uint32(0xFFFFFFFF)
+    f1 = jnp.where(valid, f1, pad_key)
+    f2 = jnp.where(valid, f2, pad_key)
+    key1_s, key2_s, lens_s, valid_s = jax.lax.sort(
+        (f1, f2, ln, valid.astype(jnp.int32)), num_keys=2
+    )
+    prev1 = jnp.concatenate([jnp.full((1,), 0xFFFFFFFF, key1_s.dtype), key1_s[:-1]])
+    prev2 = jnp.concatenate([jnp.full((1,), 0xFFFFFFFF, key2_s.dtype), key2_s[:-1]])
+    first = ((key1_s != prev1) | (key2_s != prev2)) & (valid_s > 0)
+    original = jnp.sum(lens_s * valid_s)
+    dedup = jnp.sum(jnp.where(first, lens_s, 0))
+    return {
+        "original_bytes": original,
+        "dedup_bytes": dedup,
+        "unique_chunks": jnp.sum(first.astype(jnp.int32)),
+        "total_chunks": jnp.sum(valid_s),
+    }
+
+
+def space_savings(stats) -> float:
+    o = float(stats["original_bytes"])
+    d = float(stats["dedup_bytes"])
+    return (o - d) / o if o else 0.0
+
+
+@dataclasses.dataclass
+class FingerprintIndex:
+    """Host-side incremental fingerprint database (paper SSII step 3)."""
+
+    seen: dict = dataclasses.field(default_factory=dict)
+    original_bytes: int = 0
+    dedup_bytes: int = 0
+
+    def add(self, fp: tuple, length: int) -> bool:
+        """Returns True if the chunk is new (must be stored)."""
+        self.original_bytes += int(length)
+        if fp in self.seen:
+            return False
+        self.seen[fp] = int(length)
+        self.dedup_bytes += int(length)
+        return True
+
+    def add_batch(self, fps: np.ndarray, lengths: np.ndarray) -> np.ndarray:
+        """Vectorized-ish batch add; returns bool array (new per chunk)."""
+        out = np.zeros(len(lengths), dtype=bool)
+        for i, (f, l) in enumerate(zip(map(tuple, np.asarray(fps)), lengths)):
+            if l > 0:
+                out[i] = self.add(f, int(l))
+        return out
+
+    @property
+    def savings(self) -> float:
+        if not self.original_bytes:
+            return 0.0
+        return (self.original_bytes - self.dedup_bytes) / self.original_bytes

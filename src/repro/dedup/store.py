@@ -1,0 +1,133 @@
+"""Content-addressed chunk store (paper SSII "Data Storage").
+
+Chunks are keyed by SHA-256 (collision-resistant, as the paper prescribes for
+the storage layer).  Backends: in-memory dict or a directory of block files
+with a refcount manifest — enough to run the end-to-end dedup pipeline and
+the CDC incremental checkpoint store on top of it.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+from typing import Iterable
+
+import numpy as np
+
+
+def sha256_key(chunk: bytes) -> str:
+    return hashlib.sha256(chunk).hexdigest()
+
+
+class BlockStore:
+    """In-memory content-addressed store with dedup accounting."""
+
+    def __init__(self):
+        self.blocks: dict[str, bytes] = {}
+        self.refs: dict[str, int] = {}
+        self.logical_bytes = 0  # bytes written by clients
+        self.stored_bytes = 0  # unique bytes actually stored
+
+    def put(self, chunk: bytes) -> str:
+        key = sha256_key(chunk)
+        self.logical_bytes += len(chunk)
+        if key not in self.blocks:
+            self.blocks[key] = bytes(chunk)
+            self.stored_bytes += len(chunk)
+            self.refs[key] = 0
+        self.refs[key] += 1
+        return key
+
+    def get(self, key: str) -> bytes:
+        return self.blocks[key]
+
+    def put_stream(self, data, bounds: Iterable[int]) -> list[str]:
+        """Chunk-and-store a byte stream given exclusive boundary offsets."""
+        data = np.asarray(data, dtype=np.uint8)
+        keys = []
+        s = 0
+        for e in bounds:
+            keys.append(self.put(data[s:e].tobytes()))
+            s = int(e)
+        return keys
+
+    def get_stream(self, keys: Iterable[str]) -> bytes:
+        return b"".join(self.blocks[k] for k in keys)
+
+    def release(self, key: str):
+        self.refs[key] -= 1
+        if self.refs[key] == 0:
+            blk = self.blocks.pop(key)
+            self.stored_bytes -= len(blk)
+            del self.refs[key]
+
+    @property
+    def savings(self) -> float:
+        if not self.logical_bytes:
+            return 0.0
+        return (self.logical_bytes - self.stored_bytes) / self.logical_bytes
+
+
+class DirBlockStore(BlockStore):
+    """File-backed store: one file per unique block + a json manifest.
+
+    Writes are atomic (tmp + rename) so a crashed writer never corrupts the
+    store — required by the fault-tolerant checkpoint manager built on top.
+    """
+
+    def __init__(self, root: str):
+        super().__init__()
+        self.root = root
+        os.makedirs(os.path.join(root, "blocks"), exist_ok=True)
+        self._manifest_path = os.path.join(root, "manifest.json")
+        if os.path.exists(self._manifest_path):
+            with open(self._manifest_path) as f:
+                m = json.load(f)
+            self.refs = {k: int(v) for k, v in m["refs"].items()}
+            self.logical_bytes = m["logical_bytes"]
+            self.stored_bytes = m["stored_bytes"]
+
+    def _path(self, key: str) -> str:
+        return os.path.join(self.root, "blocks", key)
+
+    def put(self, chunk: bytes) -> str:
+        key = sha256_key(chunk)
+        self.logical_bytes += len(chunk)
+        path = self._path(key)
+        if key not in self.refs:
+            tmp = path + ".tmp"
+            with open(tmp, "wb") as f:
+                f.write(chunk)
+            os.replace(tmp, path)
+            self.stored_bytes += len(chunk)
+            self.refs[key] = 0
+        self.refs[key] += 1
+        return key
+
+    def get(self, key: str) -> bytes:
+        with open(self._path(key), "rb") as f:
+            return f.read()
+
+    def get_stream(self, keys: Iterable[str]) -> bytes:
+        return b"".join(self.get(k) for k in keys)
+
+    def release(self, key: str):
+        self.refs[key] -= 1
+        if self.refs[key] == 0:
+            blk_path = self._path(key)
+            self.stored_bytes -= os.path.getsize(blk_path)
+            os.remove(blk_path)
+            del self.refs[key]
+
+    def sync_manifest(self):
+        tmp = self._manifest_path + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump(
+                {
+                    "refs": self.refs,
+                    "logical_bytes": self.logical_bytes,
+                    "stored_bytes": self.stored_bytes,
+                },
+                f,
+            )
+        os.replace(tmp, self._manifest_path)

@@ -1,0 +1,9 @@
+"""repro.distributed — logical-axis sharding rules and collective helpers."""
+from .sharding import (  # noqa: F401
+    ShardingRules,
+    active_rules,
+    constrain,
+    default_rules,
+    rules_for_config,
+    use_rules,
+)

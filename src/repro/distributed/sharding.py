@@ -1,0 +1,198 @@
+"""Logical-axis sharding rules -> PartitionSpecs (MaxText-style, mesh-aware).
+
+Models declare *logical* axes on every parameter (via layers.PT) and on key
+activations (via :func:`constrain`); this module maps them onto the physical
+mesh:
+
+  batch           -> (pod, data)     heads/kv_heads/mlp/experts/vocab/lru -> model
+  embed           -> fsdp axes       (ZeRO-3-style parameter sharding over
+                                      data, and over pod too for >=30B archs)
+  q_lora/kv_lora  -> model (low priority: yields to heads when both occur)
+
+Greedy assignment with priorities guarantees a mesh axis is used at most once
+per spec.  Divisibility fallback: a dim smaller than its mesh-axes product is
+replicated (e.g. kv_heads=4 on model=16 — replicating tiny KV projections
+beats GSPMD's 4x padding); a dim that is larger but not divisible is sharded
+unevenly (GSPMD pads; e.g. llava's 56 heads on 16 — 12.5% pad waste, recorded
+in the roofline notes).
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+from typing import Dict, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as PS
+
+
+def _template_map(fn, template):
+    """Lazy import of models.layers.template_map (models imports `constrain`
+    from this module at load time — keep the dependency one-way at import)."""
+    from repro.models.layers import template_map
+
+    return template_map(fn, template)
+
+#: lower = assigned first
+_PRIORITY = {
+    "batch": 0,
+    "vocab": 0,
+    "heads": 0,
+    "mlp": 0,
+    "experts": 0,
+    "lru": 0,
+    "kv_heads": 1,
+    "expert_mlp": 2,
+    "mlp2": 2,
+    "embed2": 2,
+    "lru2": 2,
+    "embed": 3,  # fsdp
+    "q_lora": 4,
+    "kv_lora": 4,
+}
+
+
+def default_rules(mesh: Mesh, fsdp: str = "none") -> Dict[str, Tuple[str, ...]]:
+    names = mesh.axis_names
+    multi_pod = "pod" in names
+    batch_axes = ("pod", "data") if multi_pod else ("data",)
+    fsdp_map = {
+        "none": (),
+        "data": ("data",),
+        "pod_data": ("pod", "data") if multi_pod else ("data",),
+    }
+    return {
+        "batch": batch_axes,
+        "seq": (),
+        "seq_kv": ("model",),  # decode KV caches: shard the sequence dim
+        "heads_act": ("model",),  # attention activations (possibly padded)
+        "embed": fsdp_map[fsdp],
+        "embed2": ("model",),
+        "vocab": ("model",),
+        "heads": ("model",),
+        "kv_heads": ("model",),
+        "head_dim": (),
+        "head_dim2": (),
+        "mlp": ("model",),
+        "mlp2": ("model",),
+        "experts": ("model",),
+        "expert_mlp": (),
+        "q_lora": ("model",),
+        "kv_lora": ("model",),
+        "lru": ("model",),
+        "lru2": (),
+        "conv": (),
+        "stack": (),
+    }
+
+
+def rules_for_config(mesh: Mesh, cfg) -> Dict[str, Tuple[str, ...]]:
+    """Arch-aware rules: one consistent tensor-parallel strategy per config.
+
+    * heads divide the model axis -> standard head TP (kv replicated when the
+      kv count doesn't divide — replicating tiny KV projections beats padding);
+    * heads do NOT divide (phi3's 40, llava's 56 on a 16-way axis) ->
+      head_dim TP: Q/K/V/O and the KV cache shard the 128-wide head_dim, and
+      attention contractions over head_dim all-reduce.  One decision for the
+      whole model keeps every attention tensor's sharding compatible.
+    """
+    rules = default_rules(mesh, getattr(cfg, "fsdp", "none"))
+    m = mesh.shape.get("model", 1)
+    h_eff = max(getattr(cfg, "tp_head_pad", 0), cfg.n_heads)
+    if cfg.n_heads % m != 0:
+        # padded-activation head TP: weights keep the exact head count and
+        # replicate over model (FSDP shards their embed dim); activations pad
+        # to h_eff and shard heads_act.  head_dim TP was tried and rejected:
+        # the sharded-contraction all-reduce on (B,H,S,S) scores measured
+        # 24 TiB/device at 32k prefill (EXPERIMENTS.md SSPerf).
+        rules["heads"] = ()
+        rules["kv_heads"] = ()
+        rules["head_dim"] = ()
+        if h_eff % m != 0:
+            rules["heads_act"] = ()  # no padding configured: replicate
+    elif cfg.n_kv_heads % m != 0:
+        rules["kv_heads"] = ()
+    return rules
+
+
+@dataclasses.dataclass
+class ShardingRules:
+    mesh: Mesh
+    rules: Dict[str, Tuple[str, ...]]
+
+    def spec_for(self, axes: Tuple, shape: Tuple | None = None) -> PS:
+        """PartitionSpec for logical axes (greedy, priority-ordered).
+
+        pjit rejects non-divisible shardings at argument boundaries, so every
+        assignment is divisibility-checked (shorter prefixes tried first).
+        Arch-level fallbacks (e.g. head_dim TP when the head count doesn't
+        divide the model axis) are decided once per config in
+        :func:`rules_for_config`, never per tensor — per-tensor fallbacks
+        produce *inconsistent* attention sharding (Q by heads, K/V by
+        head_dim) and a collective storm.
+        """
+        order = sorted(
+            range(len(axes)),
+            key=lambda i: _PRIORITY.get(axes[i] or "", 9),
+        )
+        assigned: list = [None] * len(axes)
+        used: set = set()
+        for i in order:
+            name = axes[i]
+            if name is None:
+                continue
+            mesh_axes = tuple(
+                a for a in self.rules.get(name, ()) if a not in used
+            )
+            if not mesh_axes:
+                continue
+            if shape is not None:
+                # longest divisible prefix (e.g. batch on (pod, data))
+                while mesh_axes:
+                    prod = int(np.prod([self.mesh.shape[a] for a in mesh_axes]))
+                    if shape[i] >= prod and shape[i] % prod == 0:
+                        break
+                    mesh_axes = mesh_axes[:-1]
+                if not mesh_axes:
+                    continue
+            assigned[i] = mesh_axes if len(mesh_axes) > 1 else mesh_axes[0]
+            used.update(mesh_axes)
+        return PS(*assigned)
+
+    def pspec_tree(self, template):
+        return _template_map(lambda t: self.spec_for(t.axes, t.shape), template)
+
+    def sharding_tree(self, template):
+        return _template_map(
+            lambda t: NamedSharding(self.mesh, self.spec_for(t.axes, t.shape)),
+            template,
+        )
+
+
+_ctx = threading.local()
+
+
+@contextlib.contextmanager
+def use_rules(rules: ShardingRules | None):
+    prev = getattr(_ctx, "rules", None)
+    _ctx.rules = rules
+    try:
+        yield
+    finally:
+        _ctx.rules = prev
+
+
+def active_rules() -> ShardingRules | None:
+    return getattr(_ctx, "rules", None)
+
+
+def constrain(x, *axes):
+    """with_sharding_constraint by logical axes; no-op outside use_rules()."""
+    rules = active_rules()
+    if rules is None:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(rules.mesh, rules.spec_for(axes, x.shape))
+    )

@@ -1,0 +1,2 @@
+"""Pallas TPU kernels for the chunking hot-spots the paper optimizes."""
+from . import ops, ref  # noqa: F401

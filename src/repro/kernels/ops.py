@@ -1,0 +1,47 @@
+"""Jitted public wrappers for the Pallas kernels.
+
+``interpret`` mode is selected automatically: on CPU (this container) the
+kernel bodies execute via the Pallas interpreter for bit-exact validation
+against ref.py; on TPU they compile to Mosaic.  Override with
+REPRO_PALLAS_INTERPRET=0/1.
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+
+from . import extremum as _extremum
+from . import gear_hash as _gear_hash
+from . import seqcdc_masks as _seqcdc_masks
+
+
+def _interpret() -> bool:
+    env = os.environ.get("REPRO_PALLAS_INTERPRET")
+    if env is not None:
+        return env not in ("0", "false", "False")
+    return jax.default_backend() != "tpu"
+
+
+def seqcdc_masks(data, seq_length: int, mode: str = "increasing"):
+    """(candidate, opposing) bitmaps via the Pallas phase-1 kernel."""
+    return _seqcdc_masks.seqcdc_masks_pallas(
+        data, seq_length, mode, interpret=_interpret()
+    )
+
+
+def gear_hash(data, table=None):
+    """Per-position uint32 Gear hash via the parallel window-32 kernel."""
+    return _gear_hash.gear_hash_pallas(data, table, interpret=_interpret())
+
+
+def block_max(data, block: int = 128):
+    """Per-block byte maxima via the range-scan kernel."""
+    return _extremum.block_max_pallas(data, block=block, interpret=_interpret())
+
+
+def flash_attention(q, k, v, **kw):
+    """Causal flash attention via the Pallas kernel (VMEM score tiles)."""
+    from . import flash_attn as _fa
+
+    return _fa.flash_attention_pallas(q, k, v, interpret=_interpret(), **kw)

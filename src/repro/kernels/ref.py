@@ -1,0 +1,122 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each kernel in ``kernels/`` must match its oracle bit-for-bit across the
+shape/dtype sweep in tests/test_kernels.py (interpret mode on CPU).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import masks as _core_masks
+
+# ---------------------------------------------------------------------------
+# SeqCDC candidate/opposing bitmaps (paper SSIII-D) — oracle is core.masks.
+# ---------------------------------------------------------------------------
+
+
+def seqcdc_masks(data: jax.Array, seq_length: int, mode: str = "increasing"):
+    """(candidate, opposing) bool bitmaps, shape = data.shape."""
+    return _core_masks.seqcdc_masks(data, seq_length, mode)
+
+
+# ---------------------------------------------------------------------------
+# Gear rolling hash (SS-CDC / FastCDC baseline substrate).
+# ---------------------------------------------------------------------------
+
+
+import functools
+
+
+@functools.lru_cache(maxsize=None)
+def _gear_table_np(seed: int):
+    import numpy as np
+
+    mask = (1 << 64) - 1  # python ints: no overflow warnings, exact wraparound
+    x = seed
+    out = []
+    for _ in range(256):
+        x = (x + 0x9E3779B97F4A7C15) & mask
+        z = x
+        z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & mask
+        z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & mask
+        z = z ^ (z >> 31)
+        out.append(z & 0xFFFFFFFF)
+    return np.asarray(out, dtype=np.uint32)
+
+
+def gear_table(seed: int = 0x9E3779B1) -> jax.Array:
+    """Deterministic 256-entry Gear table (splitmix-style, uint32)."""
+    return jnp.asarray(_gear_table_np(seed))
+
+
+def gear_hash(data: jax.Array, table: jax.Array | None = None) -> jax.Array:
+    """Sequential Gear: h[i] = (h[i-1] << 1) + G[b[i]]  (uint32 wraparound).
+
+    The oracle for kernels/gear_hash.py.  Note the rolling window is
+    effectively 32 bytes: contributions shift out of the 32-bit register.
+    """
+    if table is None:
+        table = gear_table()
+    d = data.astype(jnp.int32)
+    g = table[d]  # (n,) uint32
+
+    def step(h, gi):
+        h = (h << 1) + gi
+        return h, h
+
+    _, hs = jax.lax.scan(step, jnp.uint32(0), g)
+    return hs
+
+
+def gear_hash_parallel(data: jax.Array, table: jax.Array | None = None) -> jax.Array:
+    """Window-32 direct form: h[i] = sum_{j=0..31} G[b[i-j]] << j (uint32).
+
+    Exactly equals :func:`gear_hash` for all i (positions i < 31 include only
+    the existing terms).  This is the parallel decomposition the Pallas kernel
+    implements (DESIGN.md SS2: redundant lookups traded for full parallelism).
+    """
+    if table is None:
+        table = gear_table()
+    g = table[data.astype(jnp.int32)]
+    n = g.shape[-1]
+    acc = jnp.zeros_like(g)
+    for j in range(32):
+        shifted = jnp.roll(g, j, axis=-1) << j
+        idx = jnp.arange(n)
+        shifted = jnp.where(idx >= j, shifted, 0)
+        acc = acc + shifted
+    return acc
+
+
+# ---------------------------------------------------------------------------
+# Flash attention (LM-substrate hot spot; EXPERIMENTS.md SSPerf cell A).
+# ---------------------------------------------------------------------------
+
+
+def flash_attention(q, k, v, scale: float | None = None, causal: bool = True):
+    """Materialized-softmax oracle for kernels/flash_attn.py.
+
+    q/k/v: (B, S, H, hd), equal head counts (repeat-KV upstream for GQA).
+    """
+    B, S, H, hd = q.shape
+    if scale is None:
+        scale = 1.0 / (hd**0.5)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32) * scale
+    if causal:
+        mask = jnp.tril(jnp.ones((S, S), bool))
+        s = jnp.where(mask[None, None], s, -1e30)
+    w = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bkhd->bqhd", w.astype(v.dtype), v)
+
+
+# ---------------------------------------------------------------------------
+# Block maxima (VectorCDC / RAM-AE range-scan substrate).
+# ---------------------------------------------------------------------------
+
+
+def block_max(data: jax.Array, block: int = 128) -> jax.Array:
+    """Per-block byte maxima; data length must be a multiple of ``block``."""
+    n = data.shape[-1]
+    assert n % block == 0, (n, block)
+    return jnp.max(data.reshape(*data.shape[:-1], n // block, block), axis=-1)

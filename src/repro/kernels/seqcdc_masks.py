@@ -1,0 +1,99 @@
+"""Pallas TPU kernel: SeqCDC candidate/opposing bitmaps (phase 1).
+
+TPU adaptation of the paper's AVX-512 scan (SSIII-D, Fig. 3).  The AVX version
+loads 64-byte registers at offsets 0..SeqLength-1 and combines pairwise
+``cmpgt`` masks; here each grid step stages a TILE-byte VMEM block (plus an
+(L-1)-byte halo from the next tile, passed as a second operand so BlockSpecs
+stay non-overlapping) and performs the same shifted compares on 8x128 VPU
+lanes.  Per byte of input the kernel does L-1 compares + L-2 ANDs + 1 compare
+— arithmetic intensity ~L ops/byte, firmly HBM-bandwidth-bound, which is the
+design point: phase 1 runs at memory speed and phase 2 (core/automaton.py)
+touches only per-block summaries.
+
+VMEM budget per grid step (TILE = 64 KiB): input 64 KiB + halo + 2x64 KiB
+bool outputs + shifted temporaries ~ 0.4 MiB << 16 MiB VMEM.  TILE is a
+multiple of 1024 so the flattened byte vector maps onto whole (8,128) tiles.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_TILE = 64 * 1024
+
+
+def _masks_kernel(x_ref, tail_ref, cand_ref, opp_ref, *, L: int, inc: bool):
+    x = x_ref[...]  # (TILE,) uint8
+    t = tail_ref[0]  # (HALO,) uint8 : first HALO bytes of the next tile
+    ext = jnp.concatenate([x, t])  # (TILE + L - 1,)
+    a = ext[:-1]
+    b = ext[1:]
+    gt = b > a  # (TILE + L - 2,)
+    lt = b < a
+    fwd = gt if inc else lt
+    opp = lt if inc else gt
+    tile = x.shape[0]
+    acc = fwd[:tile]
+    for j in range(1, L - 1):  # AND of L-1 shifted pair masks (paper's M1&M2&..)
+        acc = jnp.logical_and(acc, fwd[j : j + tile])
+    cand_ref[...] = acc
+    opp_ref[...] = opp[:tile]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("seq_length", "mode", "tile", "interpret")
+)
+def seqcdc_masks_pallas(
+    data: jax.Array,
+    seq_length: int,
+    mode: str = "increasing",
+    *,
+    tile: int = DEFAULT_TILE,
+    interpret: bool = True,
+) -> tuple[jax.Array, jax.Array]:
+    """(candidate, opposing) bitmaps for a 1-D uint8 stream of any length.
+
+    Pads to a tile multiple, runs the grid, then masks the tail so that
+    cand[k] is False for k > n - L and opp[n-1:] is False — bit-identical to
+    kernels/ref.py::seqcdc_masks.
+    """
+    assert data.ndim == 1, data.shape
+    n = data.shape[0]
+    L = int(seq_length)
+    halo = max(L - 1, 1)
+    inc = mode == "increasing"
+    if n == 0:
+        z = jnp.zeros((0,), dtype=bool)
+        return z, z
+    tile = min(tile, max(1024, ((n + 1023) // 1024) * 1024))
+    n_pad = (n + tile - 1) // tile * tile
+    x = jnp.pad(data.astype(jnp.uint8), (0, n_pad - n))
+    nt = n_pad // tile
+    # tails[i] = x[(i+1)*tile : (i+1)*tile + halo], zero past the end
+    tails = jnp.pad(x, (0, tile)).reshape(nt + 1, tile)[1:, :halo]
+
+    cand, opp = pl.pallas_call(
+        functools.partial(_masks_kernel, L=L, inc=inc),
+        grid=(nt,),
+        in_specs=[
+            pl.BlockSpec((tile,), lambda i: (i,)),
+            pl.BlockSpec((1, halo), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((tile,), lambda i: (i,)),
+            pl.BlockSpec((tile,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n_pad,), jnp.bool_),
+            jax.ShapeDtypeStruct((n_pad,), jnp.bool_),
+        ],
+        interpret=interpret,
+    )(x, tails)
+
+    idx = jnp.arange(n)
+    cand = jnp.where(idx <= n - L, cand[:n], False)
+    opp = jnp.where(idx < n - 1, opp[:n], False)
+    return cand, opp

@@ -1,0 +1,5 @@
+"""repro.launch — mesh construction, dry-run, train/serve CLIs.
+
+NOTE: importing this package must not initialize jax devices; dryrun.py sets
+XLA_FLAGS before any jax import and must stay the process entry point.
+"""

@@ -1,0 +1,194 @@
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("REPRO_EXTRA_XLA_FLAGS", "")
+)
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+This is the proof that the distribution config is coherent without real
+hardware: 512 placeholder devices host the production meshes, every cell's
+step function is jit-lowered with sharded ShapeDtypeStructs and compiled by
+the full SPMD pipeline, and the compiled artifact yields the memory and
+roofline numbers recorded in EXPERIMENTS.md.
+
+Usage:
+  python -m repro.launch.dryrun --arch llama3.2-1b --shape train_4k
+  python -m repro.launch.dryrun --all --mesh both --out dryrun.json
+"""
+import argparse
+import json
+import time
+import traceback
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as PS
+
+from repro.configs import SHAPES, ModelConfig, get_config, shape_applicable
+from repro.distributed.sharding import ShardingRules, rules_for_config, use_rules
+from repro.launch import specs as S
+from repro.launch.mesh import make_production_mesh
+from repro.models import lm
+from repro.roofline import analyze
+from repro.train import optim, step as step_mod
+
+
+def shardings_for(template, rules: ShardingRules):
+    return rules.sharding_tree(template)
+
+
+def build_cell(cfg: ModelConfig, shape, mesh, *, opt_cfg=None):
+    """Returns (jitted fn, abstract args tuple) for one cell."""
+    rules = ShardingRules(mesh, rules_for_config(mesh, cfg))
+    repl = NamedSharding(mesh, PS())
+
+    p_tpl = S.params_template(cfg)
+    p_sh = shardings_for(p_tpl, rules)
+    p_abs = S.abstract_params(cfg)
+
+    if shape.kind == "train":
+        opt_cfg = opt_cfg or optim.OptConfig()
+        o_sh = optim.OptState(p_sh, p_sh, repl)
+        o_abs = S.abstract_opt(cfg, opt_cfg.opt_dtype)
+        b_tpl = S.batch_template(cfg, shape)
+        b_sh = rules.sharding_tree(b_tpl)
+        b_abs = S.abstract_batch(cfg, shape)
+        step = step_mod.make_train_step(cfg, opt_cfg)
+
+        def fn(params, opt_state, batch):
+            with use_rules(rules):  # activate constrain() at trace time
+                return step(params, opt_state, batch)
+
+        jfn = jax.jit(
+            fn,
+            in_shardings=(p_sh, o_sh, b_sh),
+            out_shardings=(p_sh, o_sh, None),
+        )
+        return jfn, (p_abs, o_abs, b_abs)
+
+    if shape.kind == "prefill":
+        b_tpl = S.batch_template(cfg, shape)
+        b_sh = rules.sharding_tree(b_tpl)
+        b_abs = S.abstract_batch(cfg, shape)
+        c_tpl = S.caches_template(cfg, shape)
+        c_sh = [shardings_for(t, rules) for t in c_tpl]
+
+        def fn(params, batch):
+            with use_rules(rules):
+                return lm.prefill_step(cfg, params, batch, cache_len=shape.seq_len)
+
+        jfn = jax.jit(fn, in_shardings=(p_sh, b_sh), out_shardings=(None, c_sh))
+        return jfn, (p_abs, b_abs)
+
+    # decode: one new token against a seq_len-long cache
+    c_tpl = S.caches_template(cfg, shape)
+    c_sh = [shardings_for(t, rules) for t in c_tpl]
+    c_abs = S.abstract_caches(cfg, shape)
+    tokens, pos = S.decode_inputs(cfg, shape)
+    tok_sh = rules.sharding_tree(
+        {"t": S.PT((shape.global_batch, 1), ("batch", None), "zeros")}
+    )["t"]
+
+    def fn(params, caches, tokens, pos):
+        with use_rules(rules):
+            return lm.decode_step(cfg, params, caches, tokens, pos)
+
+    jfn = jax.jit(
+        fn,
+        in_shardings=(p_sh, c_sh, tok_sh, repl),
+        out_shardings=(None, c_sh),
+    )
+    return jfn, (p_abs, c_abs, tokens, pos)
+
+
+def run_cell(arch: str, shape_name: str, mesh, mesh_name: str) -> Dict[str, Any]:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    rec: Dict[str, Any] = {"arch": arch, "shape": shape_name, "mesh": mesh_name}
+    if not shape_applicable(cfg, shape):
+        rec["status"] = "skipped (full-attention arch; see DESIGN.md SS5)"
+        return rec
+    try:
+        t0 = time.time()
+        jfn, args = build_cell(cfg, shape, mesh)
+        with mesh:
+            lowered = jfn.lower(*args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+        mem = compiled.memory_analysis()
+        rl = analyze.from_compiled(
+            arch, shape_name, mesh_name, mesh.size, compiled,
+            cfg=cfg, shape_cfg=shape,
+        )
+        rec.update(rl.to_dict())
+        rec.update(
+            status="ok",
+            lower_s=round(t_lower, 2),
+            compile_s=round(t_compile, 2),
+            argument_bytes=getattr(mem, "argument_size_in_bytes", None),
+            output_bytes=getattr(mem, "output_size_in_bytes", None),
+            temp_bytes=getattr(mem, "temp_size_in_bytes", None),
+            peak_bytes=(
+                getattr(mem, "argument_size_in_bytes", 0)
+                + getattr(mem, "temp_size_in_bytes", 0)
+            ),
+        )
+    except Exception as e:  # a failing cell is a bug: record it loudly
+        rec["status"] = "FAILED"
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-2000:]
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--mesh", choices=["single", "multi", "both"], default="single")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    from repro.configs import ARCHS
+
+    cells = []
+    archs = ARCHS if (args.all or not args.arch) else [args.arch]
+    shapes = list(SHAPES) if (args.all or not args.shape) else [args.shape]
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    records = []
+    for multi in meshes:
+        mesh = make_production_mesh(multi_pod=multi)
+        mesh_name = "pod2x16x16" if multi else "pod16x16"
+        for arch in archs:
+            for shape_name in shapes:
+                rec = run_cell(arch, shape_name, mesh, mesh_name)
+                records.append(rec)
+                status = rec["status"]
+                extra = ""
+                if status == "ok":
+                    extra = (
+                        f" compile={rec['compile_s']}s"
+                        f" flops/dev={rec['flops_per_device']:.3e}"
+                        f" coll/dev={rec['collective_bytes_per_device']:.3e}B"
+                        f" bottleneck={rec['bottleneck']}"
+                    )
+                print(f"[{mesh_name}] {arch} x {shape_name}: {status}{extra}", flush=True)
+                if status == "FAILED":
+                    print(rec["error"], flush=True)
+
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(records, f, indent=1)
+        print(f"wrote {len(records)} records to {args.out}")
+    n_fail = sum(r["status"] == "FAILED" for r in records)
+    print(f"cells: {len(records)}  failed: {n_fail}")
+    raise SystemExit(1 if n_fail else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,30 @@
+"""Production mesh construction.
+
+A FUNCTION, not a module-level constant — importing this module never touches
+jax device state (the dry-run must set XLA_FLAGS before any jax init).
+
+Single pod: (data=16, model=16) = 256 chips (one v5e pod).
+Multi-pod:  (pod=2, data=16, model=16) = 512 chips; the gradient all-reduce
+crosses the pod axis (DCI) — the multi-pod dry-run proves that axis shards.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = int(np.prod(shape))
+    devices = jax.devices()
+    if len(devices) > n:  # 512 placeholders present, single-pod mesh: use first 256
+        devices = devices[:n]
+    return jax.make_mesh(shape, axes, devices=devices)
+
+
+def make_host_mesh(model: int = 1):
+    """Tiny mesh over the real local devices (tests / examples on CPU)."""
+    devices = jax.devices()
+    data = max(1, len(devices) // model)
+    return jax.make_mesh((data, model), ("data", "model"), devices=devices[: data * model])

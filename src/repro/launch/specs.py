@@ -1,0 +1,111 @@
+"""Abstract input/state specs for every (architecture x input-shape) cell.
+
+``input_specs()`` returns weak-type-correct ShapeDtypeStruct stand-ins for
+every model input (no device allocation), plus the matching logical-axes
+trees from which distributed.sharding derives NamedShardings.  This is what
+launch/dryrun.py lowers and compiles, and what the roofline reads.
+
+Cell kinds (configs.base.SHAPES):
+  train    -> train_step(params, opt_state, batch)
+  prefill  -> prefill_step(params, batch) -> (last logits, caches)
+  decode   -> decode_step(params, caches, tokens, pos)  [one new token
+              against a seq_len-long KV cache]
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ModelConfig, ShapeConfig
+from repro.models import lm
+from repro.models import transformer as tfm
+from repro.models.layers import PT, template_map
+from repro.train import optim
+
+
+def abstract_tree(template, dtype):
+    """PT tree -> ShapeDtypeStruct tree."""
+    return template_map(lambda t: jax.ShapeDtypeStruct(t.shape, dtype), template)
+
+
+def params_template(cfg: ModelConfig):
+    return lm.lm_template(cfg)
+
+
+def abstract_params(cfg: ModelConfig):
+    return abstract_tree(params_template(cfg), jnp.dtype(cfg.param_dtype))
+
+
+def opt_template(cfg: ModelConfig):
+    """Optimizer state template mirroring the parameter tree (mu, nu, count)."""
+    pt = params_template(cfg)
+    return optim.OptState(pt, pt, PT((), (), "zeros"))
+
+
+def abstract_opt(cfg: ModelConfig, opt_dtype: str = "float32"):
+    pt = params_template(cfg)
+    mu = abstract_tree(pt, jnp.dtype(opt_dtype))
+    return optim.OptState(mu, mu, jax.ShapeDtypeStruct((), jnp.int32))
+
+
+def batch_template(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, PT]:
+    """Model input templates for a train/prefill cell (per input mode)."""
+    B, S = shape.global_batch, shape.seq_len
+    t: Dict[str, PT] = {}
+    if cfg.input_mode == "tokens":
+        t["tokens"] = PT((B, S), ("batch", "seq"), "zeros")
+    elif cfg.input_mode == "embeddings":
+        t["embeds"] = PT((B, S, cfg.d_model), ("batch", "seq", None), "zeros")
+    else:  # mixed: anyres patch embeddings + text tokens
+        s_txt = S - cfg.img_tokens
+        assert s_txt > 0, (S, cfg.img_tokens)
+        t["tokens"] = PT((B, s_txt), ("batch", "seq"), "zeros")
+        t["embeds"] = PT((B, cfg.img_tokens, cfg.d_model), ("batch", "seq", None), "zeros")
+    if shape.kind == "train":
+        t["labels"] = PT((B, S), ("batch", "seq"), "zeros")
+    return t
+
+
+def abstract_batch(cfg: ModelConfig, shape: ShapeConfig):
+    t = batch_template(cfg, shape)
+    out = {}
+    for k, pt in t.items():
+        dt = jnp.dtype(cfg.compute_dtype) if k == "embeds" else jnp.int32
+        out[k] = jax.ShapeDtypeStruct(pt.shape, dt)
+    return out
+
+
+def caches_template(cfg: ModelConfig, shape: ShapeConfig):
+    return tfm.stack_cache_template(cfg, shape.global_batch, shape.seq_len)
+
+
+def abstract_caches(cfg: ModelConfig, shape: ShapeConfig):
+    return [
+        abstract_tree(t, jnp.dtype(cfg.compute_dtype))
+        for t in caches_template(cfg, shape)
+    ]
+
+
+def decode_inputs(cfg: ModelConfig, shape: ShapeConfig):
+    """(tokens, pos) abstract inputs for a decode cell."""
+    B = shape.global_batch
+    tokens = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+    pos = jax.ShapeDtypeStruct((), jnp.int32)
+    return tokens, pos
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    """Every abstract input of the cell, keyed by role (the dry-run contract)."""
+    out: Dict[str, Any] = {"params": abstract_params(cfg)}
+    if shape.kind == "train":
+        out["opt_state"] = abstract_opt(cfg)
+        out["batch"] = abstract_batch(cfg, shape)
+    elif shape.kind == "prefill":
+        out["batch"] = abstract_batch(cfg, shape)
+    else:  # decode
+        out["caches"] = abstract_caches(cfg, shape)
+        tokens, pos = decode_inputs(cfg, shape)
+        out["tokens"], out["pos"] = tokens, pos
+    return out

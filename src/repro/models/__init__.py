@@ -1,0 +1,11 @@
+"""repro.models — the LM family backing the 10 assigned architectures."""
+from .lm import (  # noqa: F401
+    decode_step,
+    embed_inputs,
+    forward,
+    init_caches,
+    init_params,
+    lm_template,
+    loss_and_metrics,
+    prefill_step,
+)

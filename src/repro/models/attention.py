@@ -1,0 +1,301 @@
+"""GQA/MQA/MHA attention with RoPE, KV caches, local windows, query-block scan.
+
+One implementation serves nine of the ten architectures (DeepSeek's MLA lives
+in mla.py).  Memory discipline: sequences >= ``cfg.attn_q_block`` use a
+``lax.scan`` over query blocks so the materialized score tile is
+(q_block x S) instead of (S x S) — mandatory for the 32 K prefill cells.
+
+KV cache layout: (B, S_max, n_kv, head_dim) per layer, updated with
+``dynamic_update_slice_in_dim`` at the decode position; local-window archs
+(RecurrentGemma) keep a rolling cache of ``window`` entries instead.
+"""
+from __future__ import annotations
+
+from typing import Dict, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain
+
+from .layers import PT, apply_rope, rmsnorm
+
+NEG_INF = -1e30
+
+
+def _h_eff(cfg) -> int:
+    """Head count used for attention *activations*: padded to the TP degree
+    when the real count doesn't divide the model axis (phi3 40->48,
+    llava 56->64, recurrentgemma 10->16).  Parameters keep the exact public
+    head count; the pad rows are zeros appended to activations and sliced
+    off after the context einsum (EXPERIMENTS.md SSPerf iteration 2)."""
+    return max(cfg.tp_head_pad, cfg.n_heads)
+
+
+def attn_template(cfg) -> Dict[str, PT]:
+    d, h, kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    t = {
+        "wq": PT((d, h, hd), ("embed", "heads", "head_dim")),
+        "wk": PT((d, kv, hd), ("embed", "kv_heads", "head_dim")),
+        "wv": PT((d, kv, hd), ("embed", "kv_heads", "head_dim")),
+        "wo": PT((h, hd, d), ("heads", "head_dim", "embed")),
+    }
+    if cfg.qkv_bias:
+        t["bq"] = PT((h, hd), ("heads", "head_dim"), "zeros")
+        t["bk"] = PT((kv, hd), ("kv_heads", "head_dim"), "zeros")
+        t["bv"] = PT((kv, hd), ("kv_heads", "head_dim"), "zeros")
+    if cfg.qk_norm:
+        t["q_norm"] = PT((hd,), ("head_dim",), "ones")
+        t["k_norm"] = PT((hd,), ("head_dim",), "ones")
+    return t
+
+
+def _qkv(p, x, cfg, positions):
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    if cfg.qkv_bias:
+        q = q + p["bq"]
+        k = k + p["bk"]
+        v = v + p["bv"]
+    if cfg.qk_norm:
+        q = rmsnorm(q, p["q_norm"], cfg.norm_eps)
+        k = rmsnorm(k, p["k_norm"], cfg.norm_eps)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _scores_softmax_ctx(q, k, v, mask, scale, *, pad_to: int = 0):
+    """Attention core for train/prefill: repeat-KV form.
+
+    q (B,Sq,H,hd), k/v (B,Sk,KV,hd).  K/V are expanded to H heads and
+    (optionally) zero-padded to ``pad_to`` so every activation shards the
+    SAME ``heads_act`` axis — the (KV, G) reshape of the grouped form moves
+    the head sharding onto the (usually non-divisible) KV dim and pays a
+    reshard per layer (measured in EXPERIMENTS.md SSPerf).  The causal mask
+    enters as an additive bias (one fused add) instead of a select.
+    """
+    B, Sq, H, hd = q.shape
+    KV = k.shape[2]
+    if KV != H:
+        k = jnp.repeat(k, H // KV, axis=2)
+        v = jnp.repeat(v, H // KV, axis=2)
+    if pad_to and pad_to > H:
+        pad = [(0, 0), (0, 0), (0, pad_to - H), (0, 0)]
+        q, k, v = jnp.pad(q, pad), jnp.pad(k, pad), jnp.pad(v, pad)
+    q = constrain(q, "batch", None, "heads_act", None)
+    k = constrain(k, "batch", None, "heads_act", None)
+    v = constrain(v, "batch", None, "heads_act", None)
+    s = jnp.einsum("bqhd,bshd->bhqs", q, k).astype(jnp.float32) * scale
+    s = s + jnp.where(mask[:, None, :, :], 0.0, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1).astype(v.dtype)
+    ctx = jnp.einsum("bhqs,bshd->bqhd", w, v)
+    if pad_to and pad_to > H:
+        ctx = ctx[:, :, :H]
+    return ctx
+
+
+def _decode_ctx(q, k, v, mask, scale):
+    """Attention core for decode: grouped-query form against a cache whose
+    *sequence* dim is sharded over the model axis (seq_kv rule) — each device
+    scores its cache slice, the softmax reduces with a tiny psum, and the
+    GQA cache stays at KV width (no repeat: decode is cache-bandwidth-bound).
+    q (B,1,H,hd), k/v (B,S_c,KV,hd)."""
+    B, Sq, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    qg = q.reshape(B, Sq, KV, G, hd)
+    s = jnp.einsum("bqkgh,bskh->bkgqs", qg, k).astype(jnp.float32) * scale
+    s = s + jnp.where(mask[:, None, None, :, :], 0.0, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1).astype(v.dtype)
+    ctx = jnp.einsum("bkgqs,bskh->bqkgh", w, v)
+    return ctx.reshape(B, Sq, H, hd)
+
+
+def _flash_attention(q, k, v, cfg, scale, *, window: int = 0, pad_to: int = 0):
+    """Online-softmax attention: lax.scan over query blocks x kv blocks.
+
+    The flash-attention insight expressed at the XLA level (DESIGN.md SS2
+    hardware-adaptation note): score tiles live at (qb, kvb) and are consumed
+    immediately by the running (m, l, acc) update, so HBM traffic per layer
+    drops from O(S^2) (the materialized-score path measured at 2.9 TiB/device
+    for phi3 prefill_32k) to O(S * d).  Both loops are constant-trip scans —
+    the roofline cost model multiplies them exactly.  Numerics: f32 running
+    max/denominator; equals the reference softmax path to fp tolerance
+    (tests/test_models.py::test_flash_equals_reference).
+    """
+    B, S, H, hd = q.shape
+    KV = k.shape[2]
+    if KV != H:
+        k = jnp.repeat(k, H // KV, axis=2)
+        v = jnp.repeat(v, H // KV, axis=2)
+    if pad_to and pad_to > H:
+        pad = [(0, 0), (0, 0), (0, pad_to - H), (0, 0)]
+        q, k, v = jnp.pad(q, pad), jnp.pad(k, pad), jnp.pad(v, pad)
+    q = constrain(q, "batch", None, "heads_act", None)
+    k = constrain(k, "batch", None, "heads_act", None)
+    v = constrain(v, "batch", None, "heads_act", None)
+    Hp = q.shape[2]
+    qb = min(cfg.attn_q_block, S)
+    kvb = min(cfg.attn_kv_block or S, S)
+    assert S % qb == 0 and S % kvb == 0, (S, qb, kvb)
+    nq, nkv = S // qb, S // kvb
+
+    qs = q.transpose(0, 2, 1, 3).reshape(B, Hp, nq, qb, hd).transpose(2, 0, 1, 3, 4)
+    ks = k.transpose(0, 2, 1, 3).reshape(B, Hp, nkv, kvb, hd).transpose(2, 0, 1, 3, 4)
+    vs = v.transpose(0, 2, 1, 3).reshape(B, Hp, nkv, kvb, hd).transpose(2, 0, 1, 3, 4)
+
+    def q_step(_, xs):
+        qi, i = xs  # (B,Hp,qb,hd), scalar block index
+        qpos = i * qb + jnp.arange(qb)
+
+        def kv_step(carry, ys):
+            m, l, acc = carry
+            kj, vj, j = ys  # (B,Hp,kvb,hd), scalar
+            kpos = j * kvb + jnp.arange(kvb)
+            s = jnp.einsum("bhqd,bhkd->bhqk", qi, kj).astype(jnp.float32) * scale
+            msk = kpos[None, :] <= qpos[:, None]
+            if window:
+                msk &= kpos[None, :] > qpos[:, None] - window
+            s = s + jnp.where(msk, 0.0, NEG_INF)[None, None]
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + jnp.sum(p, axis=-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bhqk,bhkd->bhqd", p.astype(vj.dtype), vj
+            ).astype(jnp.float32)
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, Hp, qb), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, Hp, qb), jnp.float32)
+        a0 = jnp.zeros((B, Hp, qb, hd), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step, (m0, l0, a0), (ks, vs, jnp.arange(nkv))
+        )
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return None, out.astype(q.dtype)
+
+    _, outs = jax.lax.scan(q_step, None, (qs, jnp.arange(nq)))
+    # (nq, B, Hp, qb, hd) -> (B, S, Hp, hd)
+    ctx = outs.transpose(1, 0, 3, 2, 4).reshape(B, S, Hp, hd)
+    if pad_to and pad_to > H:
+        ctx = ctx[:, :, :H]
+    return ctx
+
+
+def causal_attention(q, k, v, cfg, *, window: int = 0):
+    """Full-sequence causal attention, scanning query blocks when long."""
+    B, S, H, hd = q.shape
+    scale = 1.0 / (hd**0.5) if not cfg.use_mla else 1.0 / ((cfg.qk_nope_dim + cfg.qk_rope_dim) ** 0.5)
+    if cfg.attn_kv_block and S > cfg.attn_kv_block:
+        return _flash_attention(
+            q, k, v, cfg, scale, window=window, pad_to=_h_eff(cfg)
+        )
+    qb = cfg.attn_q_block
+    kpos = jnp.arange(S)
+
+    def block_mask(qpos):
+        m = kpos[None, :] <= qpos[:, None]
+        if window:
+            m &= kpos[None, :] > qpos[:, None] - window
+        return m
+
+    pad_to = _h_eff(cfg)
+    if S <= qb:
+        mask = jnp.broadcast_to(block_mask(jnp.arange(S)), (B, S, S))
+        return _scores_softmax_ctx(q, k, v, mask, scale, pad_to=pad_to)
+
+    assert S % qb == 0, (S, qb)
+    nb = S // qb
+    qblocks = q.reshape(B, nb, qb, H, hd).transpose(1, 0, 2, 3, 4)
+
+    def step(_, xs):
+        qi, i = xs
+        qpos = i * qb + jnp.arange(qb)
+        mask = jnp.broadcast_to(block_mask(qpos), (B, qb, S))
+        ctx = _scores_softmax_ctx(qi, k, v, mask, scale, pad_to=pad_to)
+        return None, ctx
+
+    _, ctxs = jax.lax.scan(step, None, (qblocks, jnp.arange(nb)))
+    return ctxs.transpose(1, 0, 2, 3, 4).reshape(B, S, H, hd)
+
+
+def attention(p, x, cfg, positions, *, window: int = 0):
+    q, k, v = _qkv(p, x, cfg, positions)
+    ctx = causal_attention(q, k, v, cfg, window=window)
+    return jnp.einsum("bshk,hkd->bsd", ctx, p["wo"])
+
+
+# ---------------------------------------------------------------------------
+# decode path
+# ---------------------------------------------------------------------------
+
+
+class KVCache(NamedTuple):
+    k: jax.Array  # (B, S_cache, KV, hd)
+    v: jax.Array
+
+
+def init_cache(cfg, batch: int, cache_len: int, dtype) -> KVCache:
+    kv, hd = cfg.n_kv_heads, cfg.head_dim
+    shape = (batch, cache_len, kv, hd)
+    return KVCache(jnp.zeros(shape, dtype), jnp.zeros(shape, dtype))
+
+
+def prefill_attention(p, x, cfg, positions, cache_len: int, *, window: int = 0):
+    """Full-sequence pass that also fills the decode cache.
+
+    Returns (out (B,S,D), KVCache).  Full caches hold token t at slot t
+    (padded to ``cache_len``); windowed caches are rolling buffers with token
+    t at slot ``t % window`` — the same layout :func:`decode_attention`
+    expects, so prefill -> decode is seamless (equivalence-tested).
+    """
+    q, k, v = _qkv(p, x, cfg, positions)
+    ctx = causal_attention(q, k, v, cfg, window=window)
+    out = jnp.einsum("bshk,hkd->bsd", ctx, p["wo"])
+    B, S = x.shape[:2]
+    if window:
+        win = min(window, cache_len)
+        cache = init_cache(cfg, B, win, k.dtype)
+        keep = min(S, win)
+        slots = (jnp.arange(S - keep, S) % win).astype(jnp.int32)
+        ck = cache.k.at[:, slots].set(k[:, S - keep :])
+        cv = cache.v.at[:, slots].set(v[:, S - keep :])
+    else:
+        pad = [(0, 0), (0, cache_len - S), (0, 0), (0, 0)]
+        ck, cv = jnp.pad(k, pad), jnp.pad(v, pad)
+    return out, KVCache(ck, cv)
+
+
+def decode_attention(p, x, cfg, cache: KVCache, pos, *, window: int = 0):
+    """One-token decode.  x: (B, 1, D); pos: scalar int32 (current index).
+
+    For windowed archs the cache is a rolling buffer of ``window`` slots
+    (slot = pos % window); otherwise a full-length buffer indexed by pos.
+    """
+    B = x.shape[0]
+    positions = jnp.full((B, 1), pos, dtype=jnp.int32)
+    q, k, v = _qkv(p, x, cfg, positions)
+    S_c = cache.k.shape[1]
+    slot = jnp.where(window, pos % jnp.maximum(S_c, 1), pos)
+    ck = jax.lax.dynamic_update_slice_in_dim(cache.k, k.astype(cache.k.dtype), slot, axis=1)
+    cv = jax.lax.dynamic_update_slice_in_dim(cache.v, v.astype(cache.v.dtype), slot, axis=1)
+    # decode shards the cache's *sequence* dim (seq_kv -> model): each device
+    # scores its slice, softmax psums — the KV cache is the decode working
+    # set and must not be replicated across the model axis
+    ck = constrain(ck, "batch", "seq_kv", "kv_heads", "head_dim")
+    cv = constrain(cv, "batch", "seq_kv", "kv_heads", "head_dim")
+
+    scale = 1.0 / (cfg.head_dim**0.5)
+    idx = jnp.arange(S_c)
+    if window:
+        valid = (idx <= slot) | (pos >= S_c)  # rolling buffer fully valid once wrapped
+        # entries newer than `window` ago: all slots valid after wrap
+        mask = jnp.broadcast_to(valid[None, None, :], (B, 1, S_c))
+    else:
+        mask = jnp.broadcast_to((idx <= pos)[None, None, :], (B, 1, S_c))
+    ctx = _decode_ctx(q, ck, cv, mask, scale)
+    out = jnp.einsum("bshk,hkd->bsd", ctx, p["wo"])
+    return out, KVCache(ck, cv)

@@ -1,0 +1,139 @@
+"""Parameter templates, initializers, and core layers (RMSNorm/RoPE/MLP).
+
+Models are pure-functional: each module exposes ``<mod>_template(cfg)``
+returning a tree of :class:`PT` (shape + logical axes + init), from which
+``init_tree`` materializes parameters and ``distributed.sharding`` derives
+PartitionSpecs — one source of truth, so param trees and sharding specs can
+never drift apart.
+
+Logical axes used across the zoo: batch, seq, embed, vocab, heads, kv_heads,
+head_dim, mlp, experts, expert_mlp, q_lora, kv_lora, lru, conv, stack (the
+scan-over-layers dim, never sharded).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class PT:
+    """Parameter template: shape, per-dim logical axes, init spec."""
+
+    shape: tuple
+    axes: tuple
+    init: str = "normal"  # normal | zeros | ones | embed
+    scale: float | None = None  # None -> 1/sqrt(fan_in)
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def _init_one(t: PT, key, dtype):
+    if t.init == "zeros":
+        return jnp.zeros(t.shape, dtype)
+    if t.init == "ones":
+        return jnp.ones(t.shape, dtype)
+    if t.init == "embed":
+        scale = t.scale if t.scale is not None else 1.0
+        return (jax.random.normal(key, t.shape) * scale).astype(dtype)
+    fan_in = t.shape[0] if len(t.shape) == 1 else int(np.prod(t.shape[:-1]))
+    scale = t.scale if t.scale is not None else 1.0 / math.sqrt(max(fan_in, 1))
+    return (jax.random.normal(key, t.shape) * scale).astype(dtype)
+
+
+def init_tree(template: Dict[str, Any], key, dtype=jnp.float32):
+    """Materialize a parameter tree from a template tree (dict-of-dicts)."""
+    leaves, treedef = jax.tree_util.tree_flatten(
+        template, is_leaf=lambda x: isinstance(x, PT)
+    )
+    keys = jax.random.split(key, len(leaves))
+    vals = [_init_one(t, k, dtype) for t, k in zip(leaves, keys)]
+    return jax.tree_util.tree_unflatten(treedef, vals)
+
+
+def template_map(fn, template):
+    """Map over PT leaves of a template tree."""
+    return jax.tree_util.tree_map(
+        fn, template, is_leaf=lambda x: isinstance(x, PT)
+    )
+
+
+def stack_template(template: Dict[str, Any], n: int):
+    """Prepend a ``stack`` dim of size n to every leaf (scan-over-layers)."""
+    return template_map(
+        lambda t: PT((n,) + t.shape, ("stack",) + t.axes, t.init, t.scale),
+        template,
+    )
+
+
+# ---------------------------------------------------------------------------
+# layers
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm(x, scale, eps: float):
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps)).astype(dt) * scale
+
+
+def norm_template(d: int) -> PT:
+    return PT((d,), ("embed",), "ones")
+
+
+def rope_freqs(head_dim: int, theta: float):
+    half = head_dim // 2
+    inv = 1.0 / (theta ** (np.arange(0, half, dtype=np.float64) / half))
+    return jnp.asarray(inv, dtype=jnp.float32)
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (..., S, H, hd) or (..., S, hd); positions: (..., S) int32."""
+    hd = x.shape[-1]
+    inv = rope_freqs(hd, theta)  # (hd/2,)
+    ang = positions[..., None].astype(jnp.float32) * inv  # (..., S, hd/2)
+    if x.ndim == ang.ndim + 1:  # head axis present
+        ang = ang[..., None, :]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def mlp_template(d: int, d_ff: int) -> Dict[str, PT]:
+    return {
+        "gate": PT((d, d_ff), ("embed", "mlp")),
+        "up": PT((d, d_ff), ("embed", "mlp")),
+        "down": PT((d_ff, d), ("mlp", "embed")),
+    }
+
+
+def mlp_apply(p, x, act: str = "silu"):
+    g = x @ p["gate"]
+    u = x @ p["up"]
+    a = jax.nn.silu(g) if act == "silu" else jax.nn.gelu(g)
+    return (a * u) @ p["down"]
+
+
+def embed_template(vocab: int, d: int) -> PT:
+    return PT((vocab, d), ("vocab", "embed"), "embed", 0.02)
+
+
+def unembed_apply(params, x, cfg):
+    """Logits head; tied or untied."""
+    if cfg.tie_embeddings:
+        w = params["embed"]
+    else:
+        w = params["unembed"]
+    logits = x @ w.T if cfg.tie_embeddings else x @ w
+    if cfg.logits_soft_cap:
+        c = cfg.logits_soft_cap
+        logits = jnp.tanh(logits / c) * c
+    return logits

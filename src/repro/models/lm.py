@@ -1,0 +1,162 @@
+"""Top-level language model: embed -> block stack -> norm -> logits.
+
+Covers all three input modes of the assigned architectures:
+
+* ``tokens``      — standard LM (8 of 10 archs): int32 token ids.
+* ``embeddings``  — modality-frontend stub (musicgen): the EnCodec frame
+  embeddings arrive precomputed as (B, S, D); the output head still predicts
+  codec token ids over ``vocab_size``.
+* ``mixed``       — VLM backbone stub (llava-next): precomputed anyres patch
+  embeddings (B, S_img, D) are prepended to embedded text tokens; labels for
+  image positions are masked with -1.
+
+All functions are pure; parameters follow the template produced by
+:func:`lm_template` (one source of truth for shapes, logical sharding axes,
+and initializers — see models/layers.py).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain
+
+from . import transformer as tfm
+from .layers import PT, embed_template, init_tree, norm_template, rmsnorm, unembed_apply
+
+Params = Dict[str, Any]
+
+
+def compute_dtype(cfg):
+    return jnp.dtype(cfg.compute_dtype)
+
+
+def param_dtype(cfg):
+    return jnp.dtype(cfg.param_dtype)
+
+
+def lm_template(cfg) -> Params:
+    t: Params = {
+        "segments": [tpl for (_, _, tpl) in tfm.stack_templates(cfg)],
+        "final_norm": norm_template(cfg.d_model),
+    }
+    if cfg.input_mode in ("tokens", "mixed"):
+        t["embed"] = embed_template(cfg.vocab_size, cfg.d_model)
+    if not cfg.tie_embeddings:
+        t["unembed"] = PT(
+            (cfg.d_model, cfg.vocab_size), ("embed", "vocab"), "normal", 0.02
+        )
+    return t
+
+
+def init_params(cfg, key) -> Params:
+    return init_tree(lm_template(cfg), key, dtype=param_dtype(cfg))
+
+
+def embed_inputs(cfg, params: Params, batch: Dict[str, jax.Array]) -> jax.Array:
+    """(B, S, D) input activations from the arch's input mode.
+
+    The output is sharding-constrained to (batch, seq, -) — without the
+    constraint GSPMD propagates the *table's* sharding (vocab on model, embed
+    on fsdp) into the activations and every block pays a reshard (the
+    "involuntary full rematerialization" warning in the first dry-runs).
+    """
+    dt = compute_dtype(cfg)
+    if cfg.input_mode == "tokens":
+        x = params["embed"][batch["tokens"]].astype(dt)
+    elif cfg.input_mode == "embeddings":
+        x = batch["embeds"].astype(dt)
+    elif cfg.input_mode == "mixed":
+        xt = params["embed"][batch["tokens"]].astype(dt)
+        x = jnp.concatenate([batch["embeds"].astype(dt), xt], axis=1)
+    else:
+        raise ValueError(cfg.input_mode)
+    return constrain(x, "batch", "seq", None)
+
+
+def _head(cfg, params: Params, x: jax.Array) -> jax.Array:
+    x = rmsnorm(x, params["final_norm"].astype(x.dtype), cfg.norm_eps)
+    logits = unembed_apply(params, x, cfg)
+    # (B, S, V) logits are the single largest activation at vocab 50k-256k:
+    # shard the vocab dim over the model axis (1/16th per device); the loss
+    # computes its reductions on the shards and psums (B, S) partials.
+    return constrain(logits, "batch", "seq", "vocab")
+
+
+def forward(cfg, params: Params, batch: Dict[str, jax.Array]) -> jax.Array:
+    """Full-sequence logits (B, S, V) (training / evaluation path)."""
+    x = embed_inputs(cfg, params, batch)
+    positions = jnp.broadcast_to(jnp.arange(x.shape[1]), x.shape[:2])
+    x, _, _ = tfm.forward_stack(cfg, params["segments"], x, positions)
+    return _head(cfg, params, x)
+
+
+def loss_and_metrics(cfg, params: Params, batch: Dict[str, jax.Array]):
+    """Next-token cross entropy (f32 reductions) + MoE aux loss.
+
+    ``batch["labels"]`` is (B, S) int32 with -1 = masked (padding, image
+    positions).  Returns (loss, metrics dict).
+    """
+    x = embed_inputs(cfg, params, batch)
+    positions = jnp.broadcast_to(jnp.arange(x.shape[1]), x.shape[:2])
+    x, _, aux = tfm.forward_stack(cfg, params["segments"], x, positions)
+    logits = _head(cfg, params, x)
+
+    labels = batch["labels"]
+    mask = (labels >= 0).astype(jnp.float32)
+    lab = jnp.maximum(labels, 0)
+    # max-shifted logsumexp: the f32 exp/sum fuses over the vocab-sharded
+    # logits without materializing a second (B, S, V) f32 buffer
+    logits32 = logits.astype(jnp.float32)
+    m = jax.lax.stop_gradient(jnp.max(logits32, axis=-1, keepdims=True))
+    lse = jnp.log(jnp.sum(jnp.exp(logits32 - m), axis=-1)) + m[..., 0]
+    tgt = jnp.take_along_axis(logits32, lab[..., None], axis=-1)[..., 0]
+    nll = (lse - tgt) * mask
+    denom = jnp.maximum(mask.sum(), 1.0)
+    ce = nll.sum() / denom
+    aux32 = aux.astype(jnp.float32)
+    loss = ce + cfg.moe_aux_coef * aux32
+    return loss, {"loss": loss, "ce": ce, "aux": aux32, "tokens": mask.sum()}
+
+
+# ---------------------------------------------------------------------------
+# serving path
+# ---------------------------------------------------------------------------
+
+
+def init_caches(cfg, batch: int, cache_len: int, dtype=None):
+    """Decode caches, parallel to the segment structure."""
+    return tfm.init_stack_states(cfg, batch, cache_len, dtype or compute_dtype(cfg))
+
+
+def prefill_step(cfg, params: Params, batch: Dict[str, jax.Array], cache_len: int):
+    """Process the prompt; returns (last-token logits (B, V), caches).
+
+    Only the final position's logits are materialized — at 32 K prompts the
+    full (B, S, V) logits tensor would dominate HBM for nothing.
+    """
+    x = embed_inputs(cfg, params, batch)
+    positions = jnp.broadcast_to(jnp.arange(x.shape[1]), x.shape[:2])
+    x, caches = tfm.prefill_stack(cfg, params["segments"], x, positions, cache_len)
+    logits = _head(cfg, params, x[:, -1:, :])
+    return logits[:, 0], caches
+
+
+def decode_step(cfg, params: Params, caches, tokens: jax.Array, pos):
+    """One decode step.  tokens (B, 1) int32, pos scalar int32 (absolute).
+
+    Returns (logits (B, V), new caches).  For ``embeddings`` input mode the
+    generated codec ids are embedded with the output head's transpose (the
+    frontend stub has no encoder at decode time).
+    """
+    dt = compute_dtype(cfg)
+    if cfg.input_mode in ("tokens", "mixed"):
+        x = params["embed"][tokens].astype(dt)
+    else:
+        w = params["embed"] if cfg.tie_embeddings else params["unembed"].T
+        x = w[tokens].astype(dt)
+    x, caches = tfm.decode_stack(cfg, params["segments"], x, caches, pos)
+    logits = _head(cfg, params, x)
+    return logits[:, 0], caches

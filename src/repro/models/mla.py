@@ -1,0 +1,140 @@
+"""DeepSeek-V3 Multi-head Latent Attention (MLA).
+
+Prefill/train: reconstruct full K/V from the compressed latents (standard).
+Decode: the *absorbed* formulation — the KV up-projection is folded into the
+query/output sides so the cache holds only (c_kv: kv_lora_rank) + (k_rope:
+qk_rope_dim) per token: 512+64 floats vs n_heads*head_dim*2 = 32768 for MHA.
+That 57x cache compression is what makes the deepseek decode_32k/serve cells
+memory-feasible, and is reflected in the roofline table.
+"""
+from __future__ import annotations
+
+from typing import Dict, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import PT, apply_rope, rmsnorm
+
+NEG_INF = -1e30
+
+
+def mla_template(cfg) -> Dict[str, PT]:
+    d, h = cfg.d_model, cfg.n_heads
+    ql, kl = cfg.q_lora_rank, cfg.kv_lora_rank
+    dn, dr, dv = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    return {
+        "wq_a": PT((d, ql), ("embed", "q_lora")),
+        "q_norm": PT((ql,), ("q_lora",), "ones"),
+        "wq_b": PT((ql, h, dn + dr), ("q_lora", "heads", "head_dim")),
+        "wkv_a": PT((d, kl + dr), ("embed", "kv_lora")),
+        "kv_norm": PT((kl,), ("kv_lora",), "ones"),
+        "wk_b": PT((kl, h, dn), ("kv_lora", "heads", "head_dim")),
+        "wv_b": PT((kl, h, dv), ("kv_lora", "heads", "head_dim")),
+        "wo": PT((h, dv, d), ("heads", "head_dim", "embed")),
+    }
+
+
+def _latents(p, x, cfg, positions):
+    """Shared down-projections.  Returns (q_nope, q_rope, c_kv, k_rope)."""
+    dn, dr = cfg.qk_nope_dim, cfg.qk_rope_dim
+    cq = rmsnorm(x @ p["wq_a"], p["q_norm"], cfg.norm_eps)
+    q = jnp.einsum("bsl,lhk->bshk", cq, p["wq_b"])
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+
+    ckv_full = x @ p["wkv_a"]  # (B,S,kl+dr)
+    c_kv = rmsnorm(ckv_full[..., : cfg.kv_lora_rank], p["kv_norm"], cfg.norm_eps)
+    k_rope = apply_rope(ckv_full[..., cfg.kv_lora_rank :], positions, cfg.rope_theta)
+    return q_nope, q_rope, c_kv, k_rope
+
+
+def mla_attention(p, x, cfg, positions):
+    """Train/prefill path: materialize K/V per head, query-block scanned."""
+    B, S, _ = x.shape
+    dn, dr, dv = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    q_nope, q_rope, c_kv, k_rope = _latents(p, x, cfg, positions)
+    k_nope = jnp.einsum("bsl,lhk->bshk", c_kv, p["wk_b"])
+    v = jnp.einsum("bsl,lhk->bshk", c_kv, p["wv_b"])
+    scale = 1.0 / ((dn + dr) ** 0.5)
+    kpos = jnp.arange(S)
+    qb = cfg.attn_q_block
+
+    def block(qn, qr, qpos):
+        # shared k_rope across heads (MQA-style rope channel)
+        s = jnp.einsum("bqhk,bshk->bhqs", qn, k_nope) + jnp.einsum(
+            "bqhk,bsk->bhqs", qr, k_rope
+        )
+        s = s.astype(jnp.float32) * scale
+        mask = kpos[None, :] <= qpos[:, None]
+        s = jnp.where(mask[None, None, :, :], s, NEG_INF)
+        w = jax.nn.softmax(s, axis=-1).astype(v.dtype)
+        return jnp.einsum("bhqs,bshk->bqhk", w, v)
+
+    if S <= qb:
+        ctx = block(q_nope, q_rope, jnp.arange(S))
+    else:
+        assert S % qb == 0
+        nb = S // qb
+        qn_b = q_nope.reshape(B, nb, qb, *q_nope.shape[2:]).transpose(1, 0, 2, 3, 4)
+        qr_b = q_rope.reshape(B, nb, qb, *q_rope.shape[2:]).transpose(1, 0, 2, 3, 4)
+
+        def step(_, xs):
+            qn, qr, i = xs
+            return None, block(qn, qr, i * qb + jnp.arange(qb))
+
+        _, ctxs = jax.lax.scan(step, None, (qn_b, qr_b, jnp.arange(nb)))
+        ctx = ctxs.transpose(1, 0, 2, 3, 4).reshape(B, S, cfg.n_heads, dv)
+    return jnp.einsum("bshk,hkd->bsd", ctx, p["wo"])
+
+
+class MLACache(NamedTuple):
+    c_kv: jax.Array  # (B, S_cache, kv_lora_rank)
+    k_rope: jax.Array  # (B, S_cache, qk_rope_dim)
+
+
+def init_mla_cache(cfg, batch: int, cache_len: int, dtype) -> MLACache:
+    return MLACache(
+        jnp.zeros((batch, cache_len, cfg.kv_lora_rank), dtype),
+        jnp.zeros((batch, cache_len, cfg.qk_rope_dim), dtype),
+    )
+
+
+def mla_prefill(p, x, cfg, positions, cache_len: int):
+    """Full-sequence pass that also fills the compressed decode cache."""
+    out = mla_attention(p, x, cfg, positions)
+    _, _, c_kv, k_rope = _latents(p, x, cfg, positions)
+    S = x.shape[1]
+    pad = [(0, 0), (0, cache_len - S), (0, 0)]
+    return out, MLACache(jnp.pad(c_kv, pad), jnp.pad(k_rope, pad))
+
+
+def mla_decode(p, x, cfg, cache: MLACache, pos):
+    """Absorbed decode: cache stays compressed; per-head K/V never built."""
+    B = x.shape[0]
+    dn, dr, dv = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    positions = jnp.full((B, 1), pos, dtype=jnp.int32)
+    q_nope, q_rope, c_kv, k_rope = _latents(p, x, cfg, positions)
+
+    ckv = jax.lax.dynamic_update_slice_in_dim(
+        cache.c_kv, c_kv.astype(cache.c_kv.dtype), pos, axis=1
+    )
+    krp = jax.lax.dynamic_update_slice_in_dim(
+        cache.k_rope, k_rope.astype(cache.k_rope.dtype), pos, axis=1
+    )
+
+    # absorb wk_b into the query: q_abs (B,1,H,kv_lora)
+    q_abs = jnp.einsum("bqhk,lhk->bqhl", q_nope, p["wk_b"])
+    scale = 1.0 / ((dn + dr) ** 0.5)
+    s = (
+        jnp.einsum("bqhl,bsl->bhqs", q_abs, ckv)
+        + jnp.einsum("bqhk,bsk->bhqs", q_rope, krp)
+    ).astype(jnp.float32) * scale
+    S_c = ckv.shape[1]
+    mask = (jnp.arange(S_c) <= pos)[None, None, None, :]
+    s = jnp.where(mask, s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1).astype(ckv.dtype)
+    ctx_l = jnp.einsum("bhqs,bsl->bqhl", w, ckv)  # latent-space context
+    ctx = jnp.einsum("bqhl,lhk->bqhk", ctx_l, p["wv_b"])  # absorb wv_b out
+    out = jnp.einsum("bshk,hkd->bsd", ctx, p["wo"])
+    return out, MLACache(ckv, krp)

@@ -1,0 +1,107 @@
+"""Mixture-of-Experts FFN: top-k router + sort-based capacity dispatch.
+
+Dispatch strategy (DESIGN.md SS6): tokens are grouped per sequence (the group
+axis coincides with batch, so group-local sorts shard cleanly over the data
+axis with zero cross-shard traffic), then
+
+  1. top-k gates (softmax, renormalized),
+  2. group-local stable sort of the (token, expert) pairs by expert id,
+  3. rank-within-expert via sorted-run offsets (= GShard's position_in_expert
+     without the O(T x E x C) one-hot dispatch tensor),
+  4. capacity-clipped scatter into (G, E, C, D) — experts sharded over the
+     model axis, so GSPMD materializes the token all-to-all here,
+  5. grouped SwiGLU einsum over experts, scatter-add combine weighted by gates.
+
+Dropped tokens (beyond capacity) fall through on the residual path, standard
+for capacity-based MoE.  A Switch-style load-balance aux loss is returned for
+logging/training.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from .layers import PT, mlp_template
+
+
+def moe_template(cfg) -> Dict[str, PT]:
+    d, e, ff = cfg.d_model, cfg.n_experts, cfg.d_ff_expert
+    t = {
+        "router": PT((d, e), ("embed", "experts"), "normal", 0.02),
+        "gate": PT((e, d, ff), ("experts", "embed", "expert_mlp")),
+        "up": PT((e, d, ff), ("experts", "embed", "expert_mlp")),
+        "down": PT((e, ff, d), ("experts", "expert_mlp", "embed")),
+    }
+    if cfg.n_shared_experts:
+        t["shared"] = mlp_template(d, ff * cfg.n_shared_experts)
+    return t
+
+
+def moe_ffn(p, x, cfg):
+    """x: (B, S, D) -> (out (B,S,D), aux_loss scalar)."""
+    B, S, D = x.shape
+    E, K = cfg.n_experts, cfg.moe_top_k
+    C = max(1, int(S * K / E * cfg.capacity_factor))
+
+    logits = x @ p["router"]  # (B,S,E)
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, K)  # (B,S,K)
+    gate_vals = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)
+
+    # Switch-style load-balance loss: E * sum_e fraction_e * prob_e
+    counts = jnp.zeros((B, E), probs.dtype).at[
+        jnp.arange(B)[:, None, None], gate_idx
+    ].add(1.0)
+    frac = counts / (S * K)
+    mean_prob = probs.mean(axis=1)
+    aux = E * jnp.mean(jnp.sum(frac * mean_prob, axis=-1))
+
+    # --- group-local (per-sequence) sort dispatch --------------------------
+    tk = S * K
+    eid = gate_idx.reshape(B, tk)  # expert id per (token,k)
+    tok = jnp.broadcast_to(jnp.arange(S)[:, None], (S, K)).reshape(tk)
+    gw = gate_vals.reshape(B, tk)
+
+    order = jnp.argsort(eid, axis=-1, stable=True)  # (B, tk)
+    eid_s = jnp.take_along_axis(eid, order, axis=-1)
+    tok_s = tok[order]  # (B, tk) source token per slot
+    gw_s = jnp.take_along_axis(gw, order, axis=-1)
+
+    # rank within expert = index - start_of_expert_run
+    idx = jnp.arange(tk)
+    starts = jax.vmap(lambda e_row: jnp.searchsorted(e_row, jnp.arange(E)))(eid_s)
+    rank = idx[None, :] - jnp.take_along_axis(starts, eid_s, axis=-1)
+    ok = rank < C
+
+    # scatter tokens into (B, E, C, D); overflow dropped
+    src = jnp.take_along_axis(
+        x, tok_s[..., None], axis=1
+    )  # (B, tk, D) gathered token embeddings
+    buf = jnp.zeros((B, E, C, D), x.dtype)
+    e_dst = jnp.where(ok, eid_s, E)
+    r_dst = jnp.where(ok, rank, 0)
+    buf = buf.at[jnp.arange(B)[:, None], e_dst, r_dst].add(
+        src, mode="drop"
+    )
+
+    # grouped expert SwiGLU
+    g = jnp.einsum("becd,edf->becf", buf, p["gate"])
+    u = jnp.einsum("becd,edf->becf", buf, p["up"])
+    h = jax.nn.silu(g) * u
+    y = jnp.einsum("becf,efd->becd", h, p["down"])  # (B,E,C,D)
+
+    # combine: gather expert outputs back to (token,k) slots, weight, add
+    y_slots = y[jnp.arange(B)[:, None], e_dst, r_dst]  # (B,tk,D); e_dst==E drops
+    y_slots = jnp.where(ok[..., None], y_slots, 0.0)
+    out = jnp.zeros_like(x)
+    out = out.at[jnp.arange(B)[:, None], tok_s].add(
+        y_slots * gw_s[..., None].astype(y_slots.dtype)
+    )
+
+    if cfg.n_shared_experts:
+        from .layers import mlp_apply
+
+        out = out + mlp_apply(p["shared"], x, cfg.act)
+    return out, aux.astype(x.dtype)

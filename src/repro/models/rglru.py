@@ -1,0 +1,101 @@
+"""RecurrentGemma blocks: RG-LRU recurrence + causal conv, local-window MQA.
+
+The RG-LRU is a *diagonal linear* recurrence (gates depend on the input, not
+the hidden state), so training/prefill lower to ``lax.associative_scan`` —
+O(log S) depth, fully parallel — and decode is a 1-step update with constant
+state (lru h + a conv_width-1 input tail + a window-sized attention cache):
+the reason recurrentgemma-2b runs the long_500k cell (DESIGN.md SS5).
+"""
+from __future__ import annotations
+
+from typing import Dict, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import PT
+
+_C = 8.0  # RG-LRU decay sharpness constant (Griffin paper)
+
+
+def rglru_template(cfg) -> Dict[str, PT]:
+    d, w = cfg.d_model, cfg.lru_width
+    cw = cfg.conv_width
+    return {
+        "in_x": PT((d, w), ("embed", "lru")),
+        "in_y": PT((d, w), ("embed", "lru")),
+        "conv": PT((cw, w), ("conv", "lru"), "normal", 0.1),
+        "conv_b": PT((w,), ("lru",), "zeros"),
+        "wr": PT((w, w), ("lru", "lru2"), "normal", 0.02),
+        "br": PT((w,), ("lru",), "zeros"),
+        "wi": PT((w, w), ("lru", "lru2"), "normal", 0.02),
+        "bi": PT((w,), ("lru",), "zeros"),
+        "lam": PT((w,), ("lru",), "ones"),  # softplus(lam) > 0
+        "out": PT((w, d), ("lru", "embed")),
+    }
+
+
+class RGLRUState(NamedTuple):
+    h: jax.Array  # (B, W) recurrent state
+    conv_tail: jax.Array  # (B, conv_width-1, W) last inputs
+
+
+def rglru_init_state(batch: int, width: int, conv_width: int, dtype=jnp.float32):
+    return RGLRUState(
+        jnp.zeros((batch, width), dtype),
+        jnp.zeros((batch, conv_width - 1, width), dtype),
+    )
+
+
+def _causal_conv(p, u, tail):
+    """u: (B,S,W); tail: (B,cw-1,W) previous inputs.  Returns same-shape out."""
+    cw = p["conv"].shape[0]
+    ext = jnp.concatenate([tail.astype(u.dtype), u], axis=1)  # (B, S+cw-1, W)
+    out = sum(
+        ext[:, j : j + u.shape[1]] * p["conv"][j][None, None, :] for j in range(cw)
+    )
+    return out + p["conv_b"], ext[:, -(cw - 1) :]
+
+
+def _lru_coeffs(p, u):
+    """a (decay) and b (input) coefficients, f32.  u: (..., W)."""
+    uf = u.astype(jnp.float32)
+    r = jax.nn.sigmoid(uf @ p["wr"].astype(jnp.float32) + p["br"])
+    i = jax.nn.sigmoid(uf @ p["wi"].astype(jnp.float32) + p["bi"])
+    log_a = -_C * jax.nn.softplus(p["lam"].astype(jnp.float32)) * r
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.clip(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * (i * uf)
+    return a, b
+
+
+def rglru_scan(p, u, h0):
+    """Parallel RG-LRU over (B,S,W) with initial state h0 (B,W)."""
+    a, b = _lru_coeffs(p, u)
+    # fold h0 into the first input term
+    b = b.at[:, 0].add(a[:, 0] * h0.astype(b.dtype))
+
+    def combine(x, y):
+        a1, b1 = x
+        a2, b2 = y
+        return a1 * a2, a2 * b1 + b2
+
+    aa, hh = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return hh.astype(u.dtype), hh[:, -1]
+
+
+def rglru_block(p, x, cfg, *, state: RGLRUState | None = None, decode=False):
+    """Full recurrent block (norm/residual by caller)."""
+    B = x.shape[0]
+    if state is None:
+        state = rglru_init_state(B, cfg.lru_width, cfg.conv_width)
+    y = jax.nn.gelu(x @ p["in_y"])
+    u = x @ p["in_x"]
+    u, tail = _causal_conv(p, u, state.conv_tail)
+    if decode:
+        a, b = _lru_coeffs(p, u[:, 0])
+        h1 = a * state.h.astype(jnp.float32) + b
+        out = (h1[:, None, :].astype(x.dtype) * y) @ p["out"]
+        return out, RGLRUState(h1.astype(state.h.dtype), tail)
+    hh, h_last = rglru_scan(p, u, state.h)
+    out = (hh * y) @ p["out"]
+    return out, RGLRUState(h_last.astype(state.h.dtype), tail)

@@ -1,0 +1,254 @@
+"""xLSTM blocks: chunkwise-parallel mLSTM and recurrent sLSTM.
+
+mLSTM: matrix memory C (hd x hd) per head with stabilized exponential gating.
+Training/prefill run the *chunkwise* form — quadratic only within a chunk
+(``cfg.mlstm_chunk``), linear across chunks via a ``lax.scan`` carrying
+(C, n, m) — so a 32 K prefill costs O(S * chunk) not O(S^2), and decode is the
+O(1) recurrent step (what makes the long_500k cell feasible, DESIGN.md SS5).
+Both forms are equivalence-tested against each other in tests/.
+
+sLSTM: scalar memory with recurrent gate connections (block-diagonal per
+head) — genuinely sequential, implemented as a per-timestep ``lax.scan``.
+"""
+from __future__ import annotations
+
+from typing import Dict, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import PT, rmsnorm
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+
+def mlstm_template(cfg) -> Dict[str, PT]:
+    d = cfg.d_model
+    du = int(d * cfg.mlstm_proj_factor)
+    h = cfg.n_heads
+    return {
+        "up_x": PT((d, du), ("embed", "mlp")),
+        "up_g": PT((d, du), ("embed", "mlp")),
+        "wq": PT((du, du), ("mlp", "mlp2")),
+        "wk": PT((du, du), ("mlp", "mlp2")),
+        "wv": PT((du, du), ("mlp", "mlp2")),
+        "wi": PT((du, h), ("mlp", "heads"), "normal", 0.01),
+        "wf": PT((du, h), ("mlp", "heads"), "normal", 0.01),
+        "bi": PT((h,), ("heads",), "zeros"),
+        "bf": PT((h,), ("heads",), "ones"),  # forget-bias > 0
+        "out_norm": PT((du,), ("mlp",), "ones"),
+        "down": PT((du, d), ("mlp", "embed")),
+    }
+
+
+class MLSTMState(NamedTuple):
+    C: jax.Array  # (B, H, hd, hd)
+    n: jax.Array  # (B, H, hd)
+    m: jax.Array  # (B, H)
+
+
+def mlstm_init_state(batch: int, heads: int, hd: int, dtype=jnp.float32):
+    return MLSTMState(
+        jnp.zeros((batch, heads, hd, hd), dtype),
+        jnp.zeros((batch, heads, hd), dtype),
+        jnp.full((batch, heads), -1e30, dtype),
+    )
+
+
+def _gates(p, xu):
+    """log-input-gate a (B,S,H), log-forget logf (B,S,H) (logsigmoid)."""
+    a = (xu @ p["wi"] + p["bi"]).astype(jnp.float32)
+    f_pre = (xu @ p["wf"] + p["bf"]).astype(jnp.float32)
+    logf = jax.nn.log_sigmoid(f_pre)
+    return a, logf
+
+
+def mlstm_chunkwise(p, xu, cfg, state: MLSTMState | None = None):
+    """xu: (B, S, du) -> (h (B,S,du), final state).
+
+    Ragged sequences (S % chunk != 0) run the whole multiple through the
+    chunkwise scan and the remainder as one short chunk carrying the state —
+    exactly equivalent (the recurrence is associative across chunk splits).
+    """
+    B, S, du = xu.shape
+    H = cfg.n_heads
+    hd = du // H
+    L = min(cfg.mlstm_chunk, S)
+    if S % L != 0:
+        main = (S // L) * L
+        h1, st = mlstm_chunkwise(p, xu[:, :main], cfg, state)
+        h2, st = mlstm_chunkwise(p, xu[:, main:], cfg, st)
+        return jnp.concatenate([h1, h2], axis=1), st
+    nc = S // L
+    scale = 1.0 / (hd**0.5)
+
+    q = (xu @ p["wq"]).reshape(B, nc, L, H, hd)
+    k = (xu @ p["wk"]).reshape(B, nc, L, H, hd)
+    v = (xu @ p["wv"]).reshape(B, nc, L, H, hd)
+    a, logf = _gates(p, xu)  # (B,S,H) f32
+    a = a.reshape(B, nc, L, H)
+    logf = logf.reshape(B, nc, L, H)
+
+    if state is None:
+        state = mlstm_init_state(B, H, hd, jnp.float32)
+
+    tri = jnp.tril(jnp.ones((L, L), bool))  # j >= l
+
+    def chunk_step(st, xs):
+        C0, n0, m0 = st  # (B,H,hd,hd), (B,H,hd), (B,H)
+        qc, kc, vc, ac, fc = xs  # (B,L,H,hd) x3, (B,L,H) x2
+        b = jnp.cumsum(fc, axis=1)  # inclusive log-decay (B,L,H)
+        Btot = b[:, -1]  # (B,H)
+        # intra weights D[j,l] = b_j - b_l + a_l  (l <= j)
+        D = b[:, :, None, :] - b[:, None, :, :] + ac[:, None, :, :]  # (B,j,l,H)
+        D = jnp.where(tri[None, :, :, None], D, -jnp.inf)
+        g = b + m0[:, None, :]  # state path log-decay (B,L,H)
+        m_j = jnp.maximum(g, jnp.max(D, axis=2))  # (B,L,H)
+        sD = jnp.exp(D - m_j[:, :, None, :])  # (B,j,l,H)
+        sG = jnp.exp(g - m_j)  # (B,L,H)
+
+        qk = jnp.einsum("bjhd,blhd->bjlh", qc, kc) * scale
+        num_intra = jnp.einsum("bjlh,bjlh,blhd->bjhd", qk, sD, vc)
+        num_inter = jnp.einsum("bjhd,bhde->bjhe", qc, C0) * sG[..., None] * scale
+        num = num_intra + num_inter
+        n_j = jnp.einsum("bjlh,blhd->bjhd", sD, kc) + sG[..., None] * n0[:, None]
+        qn = jnp.abs(jnp.einsum("bjhd,bjhd->bjh", qc * scale, n_j))
+        denom = jnp.maximum(qn, jnp.exp(-m_j))
+        h = num / denom[..., None]  # (B,L,H,hd)
+
+        # carry state to chunk end
+        m1 = jnp.maximum(Btot + m0, jnp.max(Btot[:, None] - b + ac, axis=1))
+        w = jnp.exp(Btot[:, None] - b + ac - m1[:, None])  # (B,L,H)
+        C1 = jnp.exp(Btot + m0 - m1)[:, :, None, None] * C0 + jnp.einsum(
+            "blh,blhd,blhe->bhde", w, kc, vc
+        )
+        n1 = jnp.exp(Btot + m0 - m1)[:, :, None] * n0 + jnp.einsum(
+            "blh,blhd->bhd", w, kc
+        )
+        return MLSTMState(C1, n1, m1), h
+
+    # lead with the chunk axis for lax.scan
+    qf = q.astype(jnp.float32).transpose(1, 0, 2, 3, 4)
+    kf = k.astype(jnp.float32).transpose(1, 0, 2, 3, 4)
+    vf = v.astype(jnp.float32).transpose(1, 0, 2, 3, 4)
+    af = a.transpose(1, 0, 2, 3)
+    ff = logf.transpose(1, 0, 2, 3)
+    st, hs = jax.lax.scan(chunk_step, state, (qf, kf, vf, af, ff))
+    h = hs.transpose(1, 0, 2, 3, 4).reshape(B, S, H, hd).reshape(B, S, du)
+    return h.astype(xu.dtype), st
+
+
+def mlstm_step(p, xu, cfg, state: MLSTMState):
+    """Single-token recurrence.  xu: (B, 1, du)."""
+    B, _, du = xu.shape
+    H = cfg.n_heads
+    hd = du // H
+    scale = 1.0 / (hd**0.5)
+    q = (xu @ p["wq"]).reshape(B, H, hd).astype(jnp.float32)
+    k = (xu @ p["wk"]).reshape(B, H, hd).astype(jnp.float32)
+    v = (xu @ p["wv"]).reshape(B, H, hd).astype(jnp.float32)
+    a, logf = _gates(p, xu)  # (B,1,H)
+    a, logf = a[:, 0], logf[:, 0]
+    C0, n0, m0 = state
+    m1 = jnp.maximum(logf + m0, a)
+    fp = jnp.exp(logf + m0 - m1)
+    ip = jnp.exp(a - m1)
+    C1 = fp[..., None, None] * C0 + ip[..., None, None] * jnp.einsum(
+        "bhd,bhe->bhde", k, v
+    )
+    n1 = fp[..., None] * n0 + ip[..., None] * k
+    num = jnp.einsum("bhd,bhde->bhe", q * scale, C1)
+    qn = jnp.abs(jnp.einsum("bhd,bhd->bh", q * scale, n1))
+    denom = jnp.maximum(qn, jnp.exp(-m1))
+    h = (num / denom[..., None]).reshape(B, 1, du)
+    return h.astype(xu.dtype), MLSTMState(C1, n1, m1)
+
+
+def mlstm_block(p, x, cfg, *, state=None, decode=False):
+    """Full block: norm -> up -> mLSTM -> gate -> norm -> down (+ residual by caller)."""
+    xu = x @ p["up_x"]
+    gate = x @ p["up_g"]
+    if decode:
+        h, st = mlstm_step(p, xu, cfg, state)
+    else:
+        h, st = mlstm_chunkwise(p, xu, cfg, state)
+    h = rmsnorm(h, p["out_norm"], cfg.norm_eps)
+    out = (h * jax.nn.silu(gate)) @ p["down"]
+    return out, st
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+
+def slstm_template(cfg) -> Dict[str, PT]:
+    d = cfg.d_model
+    h = cfg.n_heads
+    hd = d // h
+    t = {}
+    for gname in ("i", "f", "z", "o"):
+        t[f"w{gname}"] = PT((d, d), ("embed", "embed2"))
+        t[f"r{gname}"] = PT((h, hd, hd), ("heads", "head_dim", "head_dim2"), "normal", 0.02)
+        t[f"b{gname}"] = PT((d,), ("embed",), "ones" if gname == "f" else "zeros")
+    t["out_norm"] = PT((d,), ("embed",), "ones")
+    return t
+
+
+class SLSTMState(NamedTuple):
+    h: jax.Array  # (B, D)
+    c: jax.Array
+    n: jax.Array
+    m: jax.Array
+
+
+def slstm_init_state(batch: int, d: int, dtype=jnp.float32):
+    z = jnp.zeros((batch, d), dtype)
+    return SLSTMState(z, z, z, jnp.full((batch, d), -1e30, dtype))
+
+
+def _slstm_cell(p, xt_gates, st: SLSTMState, heads: int):
+    """xt_gates: dict g -> (B, D) input contributions at time t."""
+    B, D = st.h.shape
+    hd = D // heads
+    hh = st.h.reshape(B, heads, hd)
+
+    def rec(g):
+        return jnp.einsum("bhd,hde->bhe", hh, p[f"r{g}"]).reshape(B, D)
+
+    i_pre = (xt_gates["i"] + rec("i")).astype(jnp.float32)
+    f_pre = (xt_gates["f"] + rec("f")).astype(jnp.float32)
+    z = jnp.tanh((xt_gates["z"] + rec("z")).astype(jnp.float32))
+    o = jax.nn.sigmoid((xt_gates["o"] + rec("o")).astype(jnp.float32))
+    m1 = jnp.maximum(f_pre + st.m, i_pre)
+    ip = jnp.exp(i_pre - m1)
+    fp = jnp.exp(f_pre + st.m - m1)
+    c1 = fp * st.c + ip * z
+    n1 = jnp.maximum(fp * st.n + ip, 1e-6)
+    h1 = o * (c1 / n1)
+    return SLSTMState(h1, c1, n1, m1)
+
+
+def slstm_block(p, x, cfg, *, state=None, decode=False):
+    """x: (B,S,D) scan over S (train/prefill) or (B,1,D) single step."""
+    B, S, D = x.shape
+    if state is None:
+        state = slstm_init_state(B, D)
+    gates = {g: x @ p[f"w{g}"] + p[f"b{g}"] for g in ("i", "f", "z", "o")}
+    if decode:
+        st = _slstm_cell(p, {g: gates[g][:, 0] for g in gates}, state, cfg.n_heads)
+        out = st.h[:, None, :]
+    else:
+
+        def step(st, xs):
+            st = _slstm_cell(p, dict(zip(("i", "f", "z", "o"), xs)), st, cfg.n_heads)
+            return st, st.h
+
+        xs = tuple(gates[g].transpose(1, 0, 2) for g in ("i", "f", "z", "o"))
+        st, hs = jax.lax.scan(step, state, xs)
+        out = hs.transpose(1, 0, 2)
+    out = rmsnorm(out.astype(x.dtype), p["out_norm"], cfg.norm_eps)
+    return out, st

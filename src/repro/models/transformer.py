@@ -1,0 +1,461 @@
+"""Model assembly: blocks, run-length layer segmentation, scan-over-layers.
+
+Layers are segmented into maximal runs of identical block kind; runs of
+length >= 2 are executed as a ``lax.scan`` over stacked parameters (compact
+HLO, fast compiles for the 61/80-layer archs), shorter runs are unrolled
+(hybrid patterns).  Remat policy wraps the per-block function.
+
+Block kinds: dense | moe | mla_dense | mla_moe | attn (hybrid local-window)
+| mlstm | slstm | rglru.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import attention as attn_mod
+from . import mla as mla_mod
+from . import moe as moe_mod
+from . import rglru as rglru_mod
+from . import ssm as ssm_mod
+from .layers import PT, mlp_apply, mlp_template, norm_template, rmsnorm, stack_template
+
+
+def layer_kinds(cfg) -> List[str]:
+    kinds = []
+    for i in range(cfg.n_layers):
+        k = cfg.block_kind(i)
+        if cfg.use_mla:
+            k = "mla_dense" if k == "dense" else ("mla_moe" if k == "moe" else k)
+        kinds.append(k)
+    return kinds
+
+
+def segments(cfg) -> List[Tuple[str, int]]:
+    """Run-length encoding of layer kinds."""
+    out: List[Tuple[str, int]] = []
+    for k in layer_kinds(cfg):
+        if out and out[-1][0] == k:
+            out[-1] = (k, out[-1][1] + 1)
+        else:
+            out.append((k, 1))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# per-kind templates
+# ---------------------------------------------------------------------------
+
+
+def block_template(kind: str, cfg) -> Dict[str, Any]:
+    d = cfg.d_model
+    if kind in ("dense", "attn"):
+        return {
+            "ln1": norm_template(d),
+            "attn": attn_mod.attn_template(cfg),
+            "ln2": norm_template(d),
+            "mlp": mlp_template(d, cfg.d_ff),
+        }
+    if kind == "moe":
+        return {
+            "ln1": norm_template(d),
+            "attn": attn_mod.attn_template(cfg),
+            "ln2": norm_template(d),
+            "moe": moe_mod.moe_template(cfg),
+        }
+    if kind == "mla_dense":
+        return {
+            "ln1": norm_template(d),
+            "mla": mla_mod.mla_template(cfg),
+            "ln2": norm_template(d),
+            "mlp": mlp_template(d, cfg.d_ff),
+        }
+    if kind == "mla_moe":
+        return {
+            "ln1": norm_template(d),
+            "mla": mla_mod.mla_template(cfg),
+            "ln2": norm_template(d),
+            "moe": moe_mod.moe_template(cfg),
+        }
+    if kind == "mlstm":
+        return {"ln": norm_template(d), "cell": ssm_mod.mlstm_template(cfg)}
+    if kind == "slstm":
+        return {"ln": norm_template(d), "cell": ssm_mod.slstm_template(cfg)}
+    if kind == "rglru":
+        return {
+            "ln1": norm_template(d),
+            "rec": rglru_mod.rglru_template(cfg),
+            "ln2": norm_template(d),
+            "mlp": mlp_template(d, cfg.d_ff),
+        }
+    raise ValueError(kind)
+
+
+def init_block_cache(kind: str, cfg, batch: int, cache_len: int, dtype):
+    """Decode-state pytree for one layer of the given kind."""
+    if kind in ("dense", "moe"):
+        return attn_mod.init_cache(cfg, batch, cache_len, dtype)
+    if kind in ("mla_dense", "mla_moe"):
+        return mla_mod.init_mla_cache(cfg, batch, cache_len, dtype)
+    if kind == "attn":  # hybrid local window: rolling buffer
+        win = min(cfg.window_size, cache_len) or cache_len
+        return attn_mod.init_cache(cfg, batch, win, dtype)
+    if kind == "mlstm":
+        du = int(cfg.d_model * cfg.mlstm_proj_factor)
+        return ssm_mod.mlstm_init_state(batch, cfg.n_heads, du // cfg.n_heads)
+    if kind == "slstm":
+        return ssm_mod.slstm_init_state(batch, cfg.d_model)
+    if kind == "rglru":
+        return rglru_mod.rglru_init_state(batch, cfg.lru_width, cfg.conv_width)
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# per-kind forward (sequence) and decode (single token)
+# ---------------------------------------------------------------------------
+
+
+def block_forward(kind: str, cfg, p, x, positions, state=None):
+    """Full-sequence pass.  Returns (x, new_state_or_None, aux)."""
+    from repro.distributed.sharding import constrain
+
+    # anchor the residual stream once per block: batch stays on (pod, data),
+    # d_model replicated — otherwise GSPMD propagates weight shardings into
+    # activations and inserts per-block reshards
+    x = constrain(x, "batch", "seq", None)
+    aux = jnp.zeros((), x.dtype)
+    if kind in ("dense", "attn", "moe"):
+        win = cfg.window_size if kind == "attn" else 0
+        h = attn_mod.attention(p["attn"], rmsnorm(x, p["ln1"], cfg.norm_eps), cfg, positions, window=win)
+        x = x + h
+        y = rmsnorm(x, p["ln2"], cfg.norm_eps)
+        if kind == "moe":
+            out, aux = moe_mod.moe_ffn(p["moe"], y, cfg)
+        else:
+            out = mlp_apply(p["mlp"], y, cfg.act)
+        return x + out, None, aux
+    if kind in ("mla_dense", "mla_moe"):
+        h = mla_mod.mla_attention(p["mla"], rmsnorm(x, p["ln1"], cfg.norm_eps), cfg, positions)
+        x = x + h
+        y = rmsnorm(x, p["ln2"], cfg.norm_eps)
+        if kind == "mla_moe":
+            out, aux = moe_mod.moe_ffn(p["moe"], y, cfg)
+        else:
+            out = mlp_apply(p["mlp"], y, cfg.act)
+        return x + out, None, aux
+    if kind == "mlstm":
+        out, st = ssm_mod.mlstm_block(p["cell"], rmsnorm(x, p["ln"], cfg.norm_eps), cfg, state=state)
+        return x + out, st, aux
+    if kind == "slstm":
+        out, st = ssm_mod.slstm_block(p["cell"], rmsnorm(x, p["ln"], cfg.norm_eps), cfg, state=state)
+        return x + out, st, aux
+    if kind == "rglru":
+        out, st = rglru_mod.rglru_block(p["rec"], rmsnorm(x, p["ln1"], cfg.norm_eps), cfg, state=state)
+        x = x + out
+        y = rmsnorm(x, p["ln2"], cfg.norm_eps)
+        return x + mlp_apply(p["mlp"], y, cfg.act), st, aux
+    raise ValueError(kind)
+
+
+def block_prefill(kind: str, cfg, p, x, positions, cache_len: int):
+    """Full-sequence pass that also produces the decode cache.
+
+    Returns (x, cache).  Attention caches are filled at slots [0, S) (rolling
+    for local windows); SSM/hybrid recurrences return their final state.
+    """
+    if kind in ("dense", "attn", "moe"):
+        win = cfg.window_size if kind == "attn" else 0
+        h, cache = attn_mod.prefill_attention(
+            p["attn"], rmsnorm(x, p["ln1"], cfg.norm_eps), cfg, positions,
+            cache_len, window=win,
+        )
+        x = x + h
+        y = rmsnorm(x, p["ln2"], cfg.norm_eps)
+        if kind == "moe":
+            out, _ = moe_mod.moe_ffn(p["moe"], y, cfg)
+        else:
+            out = mlp_apply(p["mlp"], y, cfg.act)
+        return x + out, cache
+    if kind in ("mla_dense", "mla_moe"):
+        h, cache = mla_mod.mla_prefill(
+            p["mla"], rmsnorm(x, p["ln1"], cfg.norm_eps), cfg, positions, cache_len
+        )
+        x = x + h
+        y = rmsnorm(x, p["ln2"], cfg.norm_eps)
+        if kind == "mla_moe":
+            out, _ = moe_mod.moe_ffn(p["moe"], y, cfg)
+        else:
+            out = mlp_apply(p["mlp"], y, cfg.act)
+        return x + out, cache
+    # recurrent kinds: the forward state IS the decode cache
+    x, st, _ = block_forward(kind, cfg, p, x, positions, state=None)
+    return x, st
+
+
+def block_decode(kind: str, cfg, p, x, cache, pos):
+    """Single-token pass.  Returns (x, new_cache)."""
+    if kind in ("dense", "attn", "moe"):
+        win = cfg.window_size if kind == "attn" else 0
+        h, cache = attn_mod.decode_attention(
+            p["attn"], rmsnorm(x, p["ln1"], cfg.norm_eps), cfg, cache, pos, window=win
+        )
+        x = x + h
+        y = rmsnorm(x, p["ln2"], cfg.norm_eps)
+        if kind == "moe":
+            out, _ = moe_mod.moe_ffn(p["moe"], y, cfg)
+        else:
+            out = mlp_apply(p["mlp"], y, cfg.act)
+        return x + out, cache
+    if kind in ("mla_dense", "mla_moe"):
+        h, cache = mla_mod.mla_decode(p["mla"], rmsnorm(x, p["ln1"], cfg.norm_eps), cfg, cache, pos)
+        x = x + h
+        y = rmsnorm(x, p["ln2"], cfg.norm_eps)
+        if kind == "mla_moe":
+            out, _ = moe_mod.moe_ffn(p["moe"], y, cfg)
+        else:
+            out = mlp_apply(p["mlp"], y, cfg.act)
+        return x + out, cache
+    if kind == "mlstm":
+        out, cache = ssm_mod.mlstm_block(
+            p["cell"], rmsnorm(x, p["ln"], cfg.norm_eps), cfg, state=cache, decode=True
+        )
+        return x + out, cache
+    if kind == "slstm":
+        out, cache = ssm_mod.slstm_block(
+            p["cell"], rmsnorm(x, p["ln"], cfg.norm_eps), cfg, state=cache, decode=True
+        )
+        return x + out, cache
+    if kind == "rglru":
+        out, cache = rglru_mod.rglru_block(
+            p["rec"], rmsnorm(x, p["ln1"], cfg.norm_eps), cfg, state=cache, decode=True
+        )
+        x = x + out
+        y = rmsnorm(x, p["ln2"], cfg.norm_eps)
+        return x + mlp_apply(p["mlp"], y, cfg.act), cache
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# stack execution
+# ---------------------------------------------------------------------------
+
+
+def _maybe_remat(fn, cfg):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "full":
+        return jax.checkpoint(fn)
+    if cfg.remat == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims
+        )
+    raise ValueError(cfg.remat)
+
+
+def stack_templates(cfg) -> List[Tuple[str, int, Any]]:
+    """[(kind, n, template)] per segment; n>1 -> stacked parameters.
+
+    Parameters are stacked whenever a segment has more than one layer, whether
+    it executes as a ``lax.scan`` (scan_layers=True) or unrolled — so the
+    parameter pytree (and checkpoints) are identical across the toggle.
+    """
+    out = []
+    for kind, n in segments(cfg):
+        t = block_template(kind, cfg)
+        if n > 1:
+            t = stack_template(t, n)
+        out.append((kind, n, t))
+    return out
+
+
+def forward_stack(cfg, seg_params, x, positions, states=None):
+    """Run all segments over a full sequence.
+
+    states: optional list (per segment) of stacked/single block states
+    (SSM/hybrid prefill); returns (x, new_states, aux_total).
+    """
+    aux_total = jnp.zeros((), x.dtype)
+    new_states = []
+    for si, ((kind, n, _), p) in enumerate(zip(stack_templates(cfg), seg_params)):
+        st_in = states[si] if states is not None else None
+
+        if n == 1 or not cfg.scan_layers:
+            if n == 1:
+                block = _maybe_remat(
+                    functools.partial(block_forward, kind, cfg), cfg
+                )
+                x, st, aux = block(p, x, positions, st_in)
+                new_states.append(st)
+                aux_total = aux_total + aux
+            else:  # unrolled stack (scan_layers=False): params are stacked
+                sts = []
+                for li in range(n):
+                    pl = jax.tree.map(lambda a: a[li], p)
+                    sl = jax.tree.map(lambda a: a[li], st_in) if st_in is not None else None
+                    block = _maybe_remat(
+                        functools.partial(block_forward, kind, cfg), cfg
+                    )
+                    x, st, aux = block(pl, x, positions, sl)
+                    sts.append(st)
+                    aux_total = aux_total + aux
+                new_states.append(
+                    jax.tree.map(lambda *a: jnp.stack(a), *sts) if sts[0] is not None else None
+                )
+            continue
+
+        has_state = kind in ("mlstm", "slstm", "rglru")
+
+        def body(carry, xs):
+            xc, auxc = carry
+            if has_state:
+                pl, sl = xs
+                xc, st, aux = block_fn(pl, xc, positions, sl)
+            else:
+                pl = xs
+                xc, st, aux = block_fn(pl, xc, positions, None)
+            return (xc, auxc + aux), st
+
+        block_fn = _maybe_remat(functools.partial(block_forward, kind, cfg), cfg)
+        xs = (p, st_in) if has_state else p
+        (x, aux_total), sts = jax.lax.scan(body, (x, aux_total), xs)
+        new_states.append(sts if has_state else None)
+    return x, new_states, aux_total
+
+
+def prefill_stack(cfg, seg_params, x, positions, cache_len: int):
+    """Full-sequence pass through all segments, producing decode caches.
+
+    Returns (x, caches) with caches parallel to the segment structure
+    (stacked along the scan dim where layers are scanned) — the exact pytree
+    :func:`decode_stack` consumes.
+    """
+    caches = []
+    for (kind, n, _), p in zip(stack_templates(cfg), seg_params):
+        # cache_len is shape-determining: keep it static by closing over it
+        # (never pass it through the jax.checkpoint boundary).
+        def pf(pl, xc, pos, _kind=kind):
+            return block_prefill(_kind, cfg, pl, xc, pos, cache_len)
+
+        block_fn = _maybe_remat(pf, cfg)
+        if n == 1 or not cfg.scan_layers:
+            if n == 1:
+                x, c = block_fn(p, x, positions)
+                caches.append(c)
+            else:
+                cs = []
+                for li in range(n):
+                    pl = jax.tree.map(lambda a: a[li], p)
+                    x, c = block_fn(pl, x, positions)
+                    cs.append(c)
+                caches.append(jax.tree.map(lambda *a: jnp.stack(a), *cs))
+            continue
+
+        def body(xc, pl, _fn=block_fn):
+            xc, c = _fn(pl, xc, positions)
+            return xc, c
+
+        x, cs = jax.lax.scan(body, x, p)
+        caches.append(cs)
+    return x, caches
+
+
+def decode_stack(cfg, seg_params, x, caches, pos):
+    """Single-token pass through all segments; returns (x, new_caches)."""
+    new_caches = []
+    for (kind, n, _), p, cache in zip(stack_templates(cfg), seg_params, caches):
+        if n == 1 or not cfg.scan_layers:
+            if n == 1:
+                x, c = block_decode(kind, cfg, p, x, cache, pos)
+                new_caches.append(c)
+            else:
+                cs = []
+                for li in range(n):
+                    pl = jax.tree.map(lambda a: a[li], p)
+                    cl = jax.tree.map(lambda a: a[li], cache)
+                    x, c = block_decode(kind, cfg, pl, x, cl, pos)
+                    cs.append(c)
+                new_caches.append(jax.tree.map(lambda *a: jnp.stack(a), *cs))
+            continue
+
+        def body(xc, xs):
+            pl, cl = xs
+            xc, c = block_decode(kind, cfg, pl, xc, cl, pos)
+            return xc, c
+
+        x, cs = jax.lax.scan(body, x, (p, cache))
+        new_caches.append(cs)
+    return x, new_caches
+
+
+def init_stack_states(cfg, batch: int, cache_len: int, dtype):
+    """Decode caches parallel to the segment structure (stacked where scanned)."""
+    out = []
+    for kind, n, _ in stack_templates(cfg):
+        one = init_block_cache(kind, cfg, batch, cache_len, dtype)
+        if n > 1:
+            out.append(jax.tree.map(lambda a: jnp.stack([a] * n), one))
+        else:
+            out.append(one)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# cache templates (shapes + logical sharding axes, for the dry-run/launcher)
+# ---------------------------------------------------------------------------
+
+
+def cache_template(kind: str, cfg, batch: int, cache_len: int):
+    """PT template mirroring :func:`init_block_cache` (same pytree structure).
+
+    Gives every cache leaf logical axes so distributed.sharding can derive
+    PartitionSpecs for decode-cell inputs the same way it does for params.
+    """
+    from . import attention as A
+    from . import mla as M
+
+    B = batch
+    if kind in ("dense", "moe", "attn"):
+        S = cache_len
+        if kind == "attn":
+            S = min(cfg.window_size, cache_len) or cache_len
+        kv, hd = cfg.n_kv_heads, cfg.head_dim
+        leaf = PT((B, S, kv, hd), ("batch", "seq_kv", "kv_heads", "head_dim"), "zeros")
+        return A.KVCache(leaf, leaf)
+    if kind in ("mla_dense", "mla_moe"):
+        return M.MLACache(
+            PT((B, cache_len, cfg.kv_lora_rank), ("batch", "seq_kv", None), "zeros"),
+            PT((B, cache_len, cfg.qk_rope_dim), ("batch", "seq_kv", None), "zeros"),
+        )
+    if kind == "mlstm":
+        du = int(cfg.d_model * cfg.mlstm_proj_factor)
+        hd = du // cfg.n_heads
+        return ssm_mod.MLSTMState(
+            PT((B, cfg.n_heads, hd, hd), ("batch", "heads", None, None), "zeros"),
+            PT((B, cfg.n_heads, hd), ("batch", "heads", None), "zeros"),
+            PT((B, cfg.n_heads), ("batch", "heads"), "zeros"),
+        )
+    if kind == "slstm":
+        leaf = PT((B, cfg.d_model), ("batch", None), "zeros")
+        return ssm_mod.SLSTMState(leaf, leaf, leaf, leaf)
+    if kind == "rglru":
+        return rglru_mod.RGLRUState(
+            PT((B, cfg.lru_width), ("batch", "lru"), "zeros"),
+            PT((B, cfg.conv_width - 1, cfg.lru_width), ("batch", None, "lru"), "zeros"),
+        )
+    raise ValueError(kind)
+
+
+def stack_cache_template(cfg, batch: int, cache_len: int):
+    """Cache templates parallel to init_stack_states' pytree structure."""
+    from .layers import stack_template as _stack
+
+    out = []
+    for kind, n, _ in stack_templates(cfg):
+        one = cache_template(kind, cfg, batch, cache_len)
+        if n > 1:
+            one = _stack(one, n)
+        out.append(one)
+    return out

@@ -1,0 +1,9 @@
+"""repro.roofline — three-term roofline extraction from compiled dry-runs."""
+from . import constants  # noqa: F401
+from .analyze import (  # noqa: F401
+    CollectiveStats,
+    Roofline,
+    from_compiled,
+    model_flops_for,
+    parse_collectives,
+)

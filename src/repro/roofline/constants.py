@@ -1,0 +1,7 @@
+"""TPU v5e hardware constants (the TARGET platform; container runs CPU)."""
+
+PEAK_FLOPS_BF16 = 197e12  # per chip, bf16
+HBM_BW = 819e9  # bytes/s per chip
+ICI_LINK_BW = 50e9  # bytes/s per link (~ one direction)
+
+CHIP_HBM_BYTES = 16 * 2**30  # v5e: 16 GiB HBM per chip

@@ -1,0 +1,2 @@
+"""repro.serve — slot-based continuous-batching inference engine."""
+from .engine import Engine, Request, ServeConfig  # noqa: F401

@@ -1,0 +1,146 @@
+"""Fault-tolerant training loop.
+
+* checkpoint/restart through the CDC store (incremental, cheap — adjacent
+  checkpoints dedup against each other), atomic manifests;
+* deterministic restart: the data loader is a pure function of (seed, step),
+  so resume at step k reproduces exactly the batches of an unfailed run
+  (bit-determinism is tested in tests/test_train.py);
+* straggler monitor: EWMA step time, slow steps logged and surfaced to a
+  policy hook (on real pods the hook triggers re-scheduling / hot-spare
+  swap; here it records events for inspection);
+* elastic: restore maps checkpoints onto whatever mesh/sharding the new job
+  runs with (checkpoint/store.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, List
+
+import jax
+import numpy as np
+
+from repro.checkpoint import CheckpointManager
+from . import optim, step as step_mod
+
+
+@dataclasses.dataclass
+class LoopConfig:
+    total_steps: int = 200
+    ckpt_every: int = 50
+    ckpt_async: bool = False
+    log_every: int = 10
+    straggler_factor: float = 3.0  # step slower than factor x EWMA -> event
+    ewma_alpha: float = 0.1
+
+
+class StragglerMonitor:
+    """EWMA step-time tracker with a pluggable slow-step policy hook."""
+
+    def __init__(self, factor: float, alpha: float, policy: Callable | None = None):
+        self.factor = factor
+        self.alpha = alpha
+        self.policy = policy
+        self.ewma: float | None = None
+        self.events: List[Dict] = []
+
+    def observe(self, step: int, dt: float):
+        if self.ewma is None:
+            self.ewma = dt
+            return
+        if dt > self.factor * self.ewma:
+            ev = {"step": step, "dt": dt, "ewma": self.ewma}
+            self.events.append(ev)
+            if self.policy is not None:
+                self.policy(ev)
+        self.ewma = (1 - self.alpha) * self.ewma + self.alpha * dt
+
+
+class Trainer:
+    def __init__(
+        self,
+        cfg,
+        opt_cfg: optim.OptConfig,
+        loop_cfg: LoopConfig,
+        loader,
+        ckpt: CheckpointManager | None = None,
+        *,
+        straggler_policy: Callable | None = None,
+        jit: bool = True,
+    ):
+        self.cfg = cfg
+        self.opt_cfg = opt_cfg
+        self.loop_cfg = loop_cfg
+        self.loader = loader
+        self.ckpt = ckpt
+        self.monitor = StragglerMonitor(
+            loop_cfg.straggler_factor, loop_cfg.ewma_alpha, straggler_policy
+        )
+        fn = step_mod.make_train_step(cfg, opt_cfg)
+        self.train_step = jax.jit(fn) if jit else fn
+        self.history: List[Dict] = []
+
+    # -- state ----------------------------------------------------------------
+    def init_state(self, key):
+        from repro.models import lm
+
+        params = lm.init_params(self.cfg, key)
+        return params, optim.init(self.opt_cfg, params)
+
+    def try_restore(self, params, opt_state):
+        """Resume from the newest committed checkpoint if one exists."""
+        if self.ckpt is None:
+            return 0, params, opt_state
+        step, state, extra = self.ckpt.restore(
+            tree_like={"params": params, "opt": opt_state}
+        )
+        if step is None:
+            return 0, params, opt_state
+        p = jax.tree.map(
+            lambda a, b: jax.numpy.asarray(a, b.dtype), state["params"], params
+        )
+        o = jax.tree.map(
+            lambda a, b: jax.numpy.asarray(a, b.dtype), state["opt"], opt_state
+        )
+        return int(extra.get("next_step", step + 1)), p, o
+
+    # -- loop -----------------------------------------------------------------
+    def run(self, key, steps: int | None = None):
+        steps = steps or self.loop_cfg.total_steps
+        params, opt_state = self.init_state(key)
+        start, params, opt_state = self.try_restore(params, opt_state)
+
+        for step in range(start, steps):
+            tokens, labels = self.loader.batch_at(step)
+            batch = {"tokens": tokens, "labels": labels}
+            t0 = time.perf_counter()
+            params, opt_state, metrics = self.train_step(params, opt_state, batch)
+            jax.block_until_ready(metrics["loss"])
+            dt = time.perf_counter() - t0
+            self.monitor.observe(step, dt)
+
+            rec = {
+                "step": step,
+                "loss": float(metrics["loss"]),
+                "grad_norm": float(metrics["grad_norm"]),
+                "lr": float(metrics["lr"]),
+                "dt": dt,
+            }
+            self.history.append(rec)
+            if self.loop_cfg.log_every and step % self.loop_cfg.log_every == 0:
+                print(
+                    f"step {step:5d} loss {rec['loss']:.4f} "
+                    f"gnorm {rec['grad_norm']:.3f} lr {rec['lr']:.2e} {dt*1e3:.0f}ms"
+                )
+
+            if self.ckpt and (step + 1) % self.loop_cfg.ckpt_every == 0:
+                state = {"params": params, "opt": opt_state}
+                extra = {"next_step": step + 1}
+                if self.loop_cfg.ckpt_async:
+                    self.ckpt.save_async(step, state, extra)
+                else:
+                    self.ckpt.save(step, state, extra)
+
+        if self.ckpt:
+            self.ckpt.wait()
+        return params, opt_state

@@ -1,0 +1,85 @@
+"""Train step builder: loss -> grads (optionally microbatched) -> AdamW.
+
+Gradient accumulation runs as a ``lax.scan`` over microbatches with f32
+accumulators; per-microbatch grads are in the model's compute dtype (bf16 on
+the large archs), which also halves the gradient all-reduce bytes that cross
+the data/pod axes — the "gradient compression" lever recorded in DESIGN.md
+SS6.  The returned function is pure and jit/pjit-friendly; launch/dryrun.py
+lowers it with sharded ShapeDtypeStructs.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import lm
+from . import optim
+
+
+def loss_fn(cfg, params, batch):
+    loss, metrics = lm.loss_and_metrics(cfg, params, batch)
+    return loss, metrics
+
+
+def _split_micro(batch: Dict[str, jax.Array], m: int):
+    """(B, ...) -> (m, B/m, ...) for every array in the batch dict."""
+
+    def r(x):
+        b = x.shape[0]
+        assert b % m == 0, (b, m)
+        return x.reshape(m, b // m, *x.shape[1:])
+
+    return jax.tree.map(r, batch)
+
+
+def grads_and_metrics(cfg, params, batch):
+    """Value-and-grad with optional lax.scan microbatching (f32 accumulators)."""
+    m = cfg.microbatch
+    gfun = jax.value_and_grad(functools.partial(loss_fn, cfg), has_aux=True)
+    if not m or m <= 1:
+        (loss, metrics), grads = gfun(params, batch)
+        return grads, {**metrics, "loss": loss}
+
+    micro = _split_micro(batch, m)
+
+    def body(acc, mb):
+        g_acc, l_acc = acc
+        (loss, _), grads = gfun(params, mb)
+        g_acc = jax.tree.map(
+            lambda a, g: a + g.astype(jnp.float32) / m, g_acc, grads
+        )
+        return (g_acc, l_acc + loss / m), None
+
+    g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    (grads, loss), _ = jax.lax.scan(body, (g0, jnp.zeros((), jnp.float32)), micro)
+    grads = jax.tree.map(lambda g, p: g.astype(p.dtype), grads, params)
+    return grads, {"loss": loss}
+
+
+def make_train_step(cfg, opt_cfg: optim.OptConfig):
+    """Returns train_step(params, opt_state, batch) -> (params, opt_state, metrics)."""
+
+    def train_step(params, opt_state, batch):
+        grads, metrics = grads_and_metrics(cfg, params, batch)
+        params, opt_state, opt_metrics = optim.update(
+            opt_cfg, grads, opt_state, params
+        )
+        m = {
+            "loss": metrics["loss"],
+            "grad_norm": opt_metrics["grad_norm"],
+            "lr": opt_metrics["lr"],
+        }
+        return params, opt_state, m
+
+    return train_step
+
+
+def make_eval_step(cfg):
+    def eval_step(params, batch):
+        loss, metrics = loss_fn(cfg, params, batch)
+        return {"loss": loss, "ce": metrics["ce"]}
+
+    return eval_step

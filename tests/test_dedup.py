@@ -1,0 +1,134 @@
+"""Dedup substrate: fingerprints, index, block store, ingest pipeline."""
+import os
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import make_chunker
+from repro.core.automaton import max_chunks_for
+from repro.core.params import SeqCDCParams
+from repro.core.seqcdc import boundaries_two_phase
+from repro.data import DedupIngest, PipelineConfig, snapshot_series
+from repro.dedup import (
+    BlockStore,
+    DirBlockStore,
+    FingerprintIndex,
+    chunk_fingerprints,
+    dedup_stats,
+    fingerprints_numpy,
+    space_savings,
+)
+
+P = SeqCDCParams(avg_size=256, seq_length=3, skip_trigger=6, skip_size=32,
+                 min_size=64, max_size=512)
+
+
+def test_fingerprint_jax_matches_numpy(rng):
+    data = rng.integers(0, 256, 10_000, dtype=np.uint8)
+    b, c = boundaries_two_phase(jnp.asarray(data), P)
+    mc = max_chunks_for(data.size, P)
+    fp, lens = chunk_fingerprints(jnp.asarray(data), b, c, max_chunks=mc)
+    nb = np.asarray(b)[: int(c)]
+    want = fingerprints_numpy(data, nb)
+    np.testing.assert_array_equal(np.asarray(fp)[: int(c)], want)
+    np.testing.assert_array_equal(
+        np.asarray(lens)[: int(c)], np.diff(np.concatenate([[0], nb]))
+    )
+
+
+def test_fingerprint_detects_duplicates(rng):
+    chunk = rng.integers(0, 256, 300, dtype=np.uint8)
+    data = np.concatenate([chunk, chunk, chunk])
+    bounds = np.array([300, 600, 900])
+    fp = fingerprints_numpy(data, bounds)
+    assert (fp[0] == fp[1]).all() and (fp[1] == fp[2]).all()
+
+
+def test_fingerprint_distinguishes(rng):
+    """1-byte difference flips the fingerprint (w.h.p.)."""
+    a = rng.integers(0, 256, 500, dtype=np.uint8)
+    b = a.copy()
+    b[250] ^= 1
+    fa = fingerprints_numpy(a, np.array([500]))
+    fb = fingerprints_numpy(b, np.array([500]))
+    assert not (fa == fb).all()
+
+
+def test_dedup_stats_matches_host_index(rng):
+    data = rng.integers(0, 4, 40_000, dtype=np.uint8)  # low entropy -> dups
+    b, c = boundaries_two_phase(jnp.asarray(data), P)
+    mc = max_chunks_for(data.size, P)
+    fp, lens = chunk_fingerprints(jnp.asarray(data), b, c, max_chunks=mc)
+    stats = jax.tree.map(int, dedup_stats(fp, lens))
+    idx = FingerprintIndex()
+    idx.add_batch(np.asarray(fp), np.asarray(lens))
+    assert stats["original_bytes"] == idx.original_bytes == data.size
+    assert stats["dedup_bytes"] == idx.dedup_bytes
+    assert 0.0 <= space_savings(stats) <= 1.0
+
+
+def test_block_store_roundtrip(rng):
+    data = rng.integers(0, 256, 10_000, dtype=np.uint8)
+    c = make_chunker("seqcdc_numpy", 8192, params=P)
+    bounds = c.chunk(data)
+    s = BlockStore()
+    keys = s.put_stream(data, bounds)
+    assert s.get_stream(keys) == data.tobytes()
+    # storing again dedups 100%
+    before = s.stored_bytes
+    s.put_stream(data, bounds)
+    assert s.stored_bytes == before
+    assert s.savings == pytest.approx(0.5)
+
+
+def test_dir_block_store_crash_safety(tmp_path, rng):
+    root = str(tmp_path / "store")
+    s = DirBlockStore(root)
+    data = rng.integers(0, 256, 5000, dtype=np.uint8)
+    key = s.put(data.tobytes())
+    # a crashed writer leaves only a .tmp file: simulate + verify reload
+    orphan = os.path.join(root, "blocks", "deadbeef.tmp")
+    with open(orphan, "wb") as f:
+        f.write(b"partial")
+    s.sync_manifest()
+    s2 = DirBlockStore(root)
+    assert s2.get(key) == data.tobytes()
+    assert s2.stored_bytes == s.stored_bytes
+
+
+def test_release_refcounting(rng):
+    s = BlockStore()
+    k = s.put(b"hello world" * 10)
+    s.put(b"hello world" * 10)
+    s.release(k)
+    assert k in s.blocks  # still one ref
+    s.release(k)
+    assert k not in s.blocks
+
+
+def test_ingest_pipeline_savings(rng):
+    """Snapshot series with few edits -> high dedup in the ingest pipeline."""
+    snaps = list(snapshot_series(base_bytes=1 << 20, snapshots=4,
+                                 edit_rate=2e-5, seed=5))
+    corpus = np.concatenate(snaps)
+    cfg = PipelineConfig(avg_chunk=4096, segment_bytes=1 << 18, batch_segments=4)
+    ing = DedupIngest(cfg)
+    out_bytes = sum(len(u) for u in ing.unique_bytes(corpus))
+    assert ing.savings > 0.5, ing.savings
+    assert out_bytes < corpus.size * 0.55
+
+
+def test_ingest_token_batches(rng):
+    corpus = rng.integers(0, 256, 1 << 20, dtype=np.uint8)
+    cfg = PipelineConfig(avg_chunk=4096, segment_bytes=1 << 18,
+                         batch_segments=2, seq_len=128, batch_size=4)
+    ing = DedupIngest(cfg)
+    batches = []
+    for b in ing.token_batches(corpus):
+        batches.append(b)
+        if len(batches) >= 3:
+            break
+    assert all(b.shape == (4, 129) for b in batches)

@@ -1,0 +1,150 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweep, bit-exact.
+
+Kernels run in interpret mode on CPU (the kernel body executes in Python);
+on TPU the same BlockSpecs compile to Mosaic.  Every kernel must match its
+ref.py oracle exactly across lengths that exercise padding, halo, and
+multi-tile grids.
+"""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from repro.kernels import ops, ref
+from repro.kernels.extremum import block_max_pallas
+from repro.kernels.gear_hash import gear_hash_pallas
+from repro.kernels.seqcdc_masks import seqcdc_masks_pallas
+
+LENGTHS = [1, 2, 31, 32, 100, 1023, 1024, 1025, 4096, 70000]
+
+
+@pytest.mark.parametrize("n", LENGTHS)
+@pytest.mark.parametrize("L", [3, 5, 7])
+@pytest.mark.parametrize("mode", ["increasing", "decreasing"])
+def test_seqcdc_masks_kernel(n, L, mode, rng):
+    data = jnp.asarray(rng.integers(0, 256, n, dtype=np.uint8))
+    cand_k, opp_k = seqcdc_masks_pallas(data, L, mode, interpret=True)
+    cand_r, opp_r = ref.seqcdc_masks(data, L, mode)
+    np.testing.assert_array_equal(np.asarray(cand_k), np.asarray(cand_r))
+    np.testing.assert_array_equal(np.asarray(opp_k), np.asarray(opp_r))
+
+
+@pytest.mark.parametrize("tile", [1024, 4096])
+def test_seqcdc_masks_tile_sweep(tile, rng):
+    data = jnp.asarray(rng.integers(0, 256, 10_000, dtype=np.uint8))
+    cand_k, opp_k = seqcdc_masks_pallas(data, 5, tile=tile, interpret=True)
+    cand_r, opp_r = ref.seqcdc_masks(data, 5, "increasing")
+    np.testing.assert_array_equal(np.asarray(cand_k), np.asarray(cand_r))
+    np.testing.assert_array_equal(np.asarray(opp_k), np.asarray(opp_r))
+
+
+@pytest.mark.parametrize("n", LENGTHS)
+def test_gear_hash_kernel(n, rng):
+    data = jnp.asarray(rng.integers(0, 256, n, dtype=np.uint8))
+    hk = gear_hash_pallas(data, interpret=True)
+    hr = ref.gear_hash(data)  # sequential scan oracle
+    np.testing.assert_array_equal(np.asarray(hk), np.asarray(hr))
+
+
+def test_gear_parallel_equals_sequential(rng):
+    data = jnp.asarray(rng.integers(0, 256, 5000, dtype=np.uint8))
+    np.testing.assert_array_equal(
+        np.asarray(ref.gear_hash_parallel(data)), np.asarray(ref.gear_hash(data))
+    )
+
+
+@pytest.mark.parametrize("n", [128, 1000, 65536, 70001])
+@pytest.mark.parametrize("block", [64, 128])
+def test_block_max_kernel(n, block, rng):
+    data = jnp.asarray(rng.integers(0, 256, n, dtype=np.uint8))
+    got = block_max_pallas(data, block=block, interpret=True)
+    nb = (n + block - 1) // block
+    padded = np.zeros(nb * block, dtype=np.uint8)
+    padded[:n] = np.asarray(data)
+    want = padded.reshape(nb, block).max(axis=1)
+    np.testing.assert_array_equal(np.asarray(got), want)
+
+
+@settings(max_examples=30, deadline=None)
+@given(data=st.binary(min_size=1, max_size=3000), L=st.integers(3, 7))
+def test_property_masks_kernel(data, L):
+    arr = jnp.asarray(np.frombuffer(data, dtype=np.uint8))
+    cand_k, opp_k = seqcdc_masks_pallas(arr, L, interpret=True)
+    cand_r, opp_r = ref.seqcdc_masks(arr, L, "increasing")
+    np.testing.assert_array_equal(np.asarray(cand_k), np.asarray(cand_r))
+    np.testing.assert_array_equal(np.asarray(opp_k), np.asarray(opp_r))
+
+
+@pytest.mark.parametrize(
+    "B,S,H,hd,qb,kvb",
+    [(2, 64, 2, 16, 16, 16), (1, 128, 4, 32, 32, 64),
+     (2, 96, 3, 8, 32, 32), (1, 256, 2, 64, 64, 64)],
+)
+def test_flash_kernel(B, S, H, hd, qb, kvb):
+    """Pallas flash attention == materialized-softmax oracle (shape sweep)."""
+    import jax
+    from repro.kernels.flash_attn import flash_attention_pallas
+
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (B, S, H, hd)) * 0.4
+    k = jax.random.normal(ks[1], (B, S, H, hd)) * 0.4
+    v = jax.random.normal(ks[2], (B, S, H, hd)) * 0.4
+    got = flash_attention_pallas(q, k, v, q_block=qb, kv_block=kvb, interpret=True)
+    want = ref.flash_attention(q, k, v)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5, atol=2e-5)
+
+
+def test_flash_kernel_noncausal():
+    import jax
+    from repro.kernels.flash_attn import flash_attention_pallas
+
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    q, k, v = (jax.random.normal(x, (1, 64, 2, 16)) * 0.4 for x in ks)
+    got = flash_attention_pallas(q, k, v, causal=False, q_block=32, kv_block=32,
+                                 interpret=True)
+    want = ref.flash_attention(q, k, v, causal=False)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5, atol=2e-5)
+
+
+def test_flash_kernel_bf16():
+    import jax
+    from repro.kernels.flash_attn import flash_attention_pallas
+
+    ks = jax.random.split(jax.random.PRNGKey(2), 3)
+    q, k, v = (
+        (jax.random.normal(x, (1, 64, 2, 16)) * 0.4).astype(jnp.bfloat16)
+        for x in ks
+    )
+    got = flash_attention_pallas(q, k, v, q_block=16, kv_block=16, interpret=True)
+    want = ref.flash_attention(q, k, v)
+    assert got.dtype == jnp.bfloat16
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32),
+        rtol=2e-2, atol=2e-2,
+    )
+
+
+def test_ops_dispatch(rng):
+    """Public wrappers auto-select interpret mode on CPU."""
+    data = jnp.asarray(rng.integers(0, 256, 2048, dtype=np.uint8))
+    cand, opp = ops.seqcdc_masks(data, 5)
+    assert cand.shape == (2048,) and opp.dtype == jnp.bool_
+    h = ops.gear_hash(data)
+    assert h.dtype == jnp.uint32
+    m = ops.block_max(data, block=128)
+    assert m.shape == (16,)
+
+
+def test_full_pipeline_with_pallas_masks(rng):
+    """Two-phase SeqCDC with the Pallas phase-1 == numpy oracle."""
+    from repro.core import oracle
+    from repro.core.params import SeqCDCParams
+    from repro.core.seqcdc import boundaries_two_phase
+
+    p = SeqCDCParams(avg_size=256, seq_length=3, skip_trigger=6,
+                     skip_size=32, min_size=64, max_size=512)
+    data = rng.integers(0, 256, 50_000, dtype=np.uint8)
+    b, c = boundaries_two_phase(jnp.asarray(data), p, mask_impl="pallas")
+    got = np.asarray(b)[: int(c)].tolist()
+    assert got == oracle.boundaries_slow(data, p)

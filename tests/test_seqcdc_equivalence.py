@@ -1,0 +1,143 @@
+"""SeqCDC: every implementation agrees bit-for-bit with the slow oracle.
+
+The paper's semantics (DESIGN.md SS4) have one normative transcription
+(oracle.boundaries_slow); the event-driven numpy oracle, the two-phase
+vectorized JAX pipeline (wide and gather automaton steps), and the
+lax.while_loop sequential form must all reproduce it exactly — including the
+content-defined skip counter resets, sub-minimum regions, and max-size cuts.
+"""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from repro.core import oracle, seqcdc
+from repro.core.params import SeqCDCParams, paper_params
+
+SMALL = SeqCDCParams(
+    avg_size=256, seq_length=3, skip_trigger=6, skip_size=32,
+    min_size=64, max_size=512,
+)
+SMALL_DEC = SeqCDCParams(
+    avg_size=256, seq_length=3, skip_trigger=6, skip_size=32,
+    min_size=64, max_size=512, mode="decreasing",
+)
+
+
+def _all_impls(data: np.ndarray, p: SeqCDCParams):
+    ref = oracle.boundaries_slow(data, p)
+    out = {"numpy": oracle.boundaries_numpy(data, p).tolist()}
+    if data.size:
+        d = jnp.asarray(data)
+        for name, fn in [
+            ("wide", lambda x: seqcdc.boundaries_two_phase(x, p, step_impl="wide")),
+            ("gather", lambda x: seqcdc.boundaries_two_phase(x, p, step_impl="gather")),
+            ("event", lambda x: seqcdc.boundaries_two_phase(x, p, step_impl="event")),
+            ("sequential", lambda x: seqcdc.boundaries_sequential(x, p)),
+        ]:
+            b, c = fn(d)
+            out[name] = np.asarray(b)[: int(c)].tolist()
+    return ref, out
+
+
+@pytest.mark.parametrize("params", [SMALL, SMALL_DEC], ids=["inc", "dec"])
+@pytest.mark.parametrize("n", [0, 1, 5, 63, 64, 65, 100, 1000, 20000])
+def test_impls_match_oracle_random(params, n, rng):
+    data = rng.integers(0, 256, n, dtype=np.uint8)
+    ref, out = _all_impls(data, params)
+    for name, got in out.items():
+        assert got == ref, f"{name} diverged at n={n}"
+
+
+@pytest.mark.parametrize(
+    "data",
+    [
+        np.zeros(5000, dtype=np.uint8),
+        np.full(5000, 255, dtype=np.uint8),
+        (np.arange(5000) % 256).astype(np.uint8),  # sawtooth increasing
+        (255 - np.arange(5000) % 256).astype(np.uint8),  # sawtooth decreasing
+        np.tile(np.array([1, 2], dtype=np.uint8), 2500),  # period-2
+    ],
+    ids=["zeros", "max", "saw-inc", "saw-dec", "alt"],
+)
+def test_impls_match_oracle_adversarial(data):
+    for params in (SMALL, SMALL_DEC):
+        ref, out = _all_impls(data, params)
+        for name, got in out.items():
+            assert got == ref, name
+
+
+def test_paper_params_match_oracle(rng):
+    data = rng.integers(0, 256, 200_000, dtype=np.uint8)
+    for avg in (4096, 8192, 16384):
+        ref, out = _all_impls(data, paper_params(avg))
+        for name, got in out.items():
+            assert got == ref, (name, avg)
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    data=st.binary(min_size=0, max_size=4000),
+    seq_length=st.integers(3, 6),
+    skip_trigger=st.integers(1, 20),
+    skip_size=st.sampled_from([16, 32, 64]),
+    mode=st.sampled_from(["increasing", "decreasing"]),
+)
+def test_property_equivalence(data, seq_length, skip_trigger, skip_size, mode):
+    """Property: all implementations == oracle for arbitrary params/data."""
+    p = SeqCDCParams(
+        avg_size=128, seq_length=seq_length, skip_trigger=skip_trigger,
+        skip_size=skip_size, min_size=32, max_size=256, mode=mode,
+    )
+    arr = np.frombuffer(data, dtype=np.uint8)
+    ref, out = _all_impls(arr, p)
+    for name, got in out.items():
+        assert got == ref, name
+
+
+@settings(max_examples=40, deadline=None)
+@given(data=st.binary(min_size=1, max_size=8000))
+def test_property_boundary_invariants(data):
+    """Chunks respect [min, max] except the final remainder chunk."""
+    arr = np.frombuffer(data, dtype=np.uint8)
+    p = SMALL
+    bounds = oracle.boundaries_numpy(arr, p)
+    assert bounds[-1] == arr.size
+    lens = np.diff(np.concatenate([[0], bounds]))
+    assert (lens[:-1] >= p.min_size).all() or lens.size <= 1
+    assert (lens <= p.max_size).all()
+
+
+def test_byte_shift_resistance(rng):
+    """Paper SSIV: an insertion mid-stream only perturbs nearby boundaries."""
+    data = rng.integers(0, 256, 300_000, dtype=np.uint8)
+    p = paper_params(8192)
+    b0 = set(oracle.boundaries_numpy(data, p).tolist())
+    pos = 150_000
+    shifted = np.concatenate([data[:pos], rng.integers(0, 256, 7, dtype=np.uint8), data[pos:]])
+    b1 = oracle.boundaries_numpy(shifted, p)
+    # boundaries before the edit are identical; after it, the +7-shifted
+    # boundary set re-synchronizes (most boundaries survive the shift)
+    before = [b for b in b1 if b < pos]
+    assert all(b in b0 for b in before)
+    after = [b - 7 for b in b1 if b >= pos + 7]
+    survive = sum(b in b0 for b in after) / max(len(after), 1)
+    assert survive > 0.9, f"only {survive:.2%} of downstream boundaries survived"
+
+
+def test_block_width_invariant():
+    """The automaton's W-block invariant: W <= min(skip, sub-min)."""
+    for avg in (4096, 8192, 16384):
+        p = paper_params(avg)
+        assert p.block_width <= min(p.skip_size, p.min_size - p.seq_length)
+        assert p.block_width & (p.block_width - 1) == 0  # power of two
+
+
+def test_batched_matches_single(rng):
+    data = rng.integers(0, 256, (4, 8192), dtype=np.uint8)
+    bounds, counts = seqcdc.boundaries_batch(jnp.asarray(data), SMALL)
+    for i in range(4):
+        ref = oracle.boundaries_slow(data[i], SMALL)
+        got = np.asarray(bounds[i])[: int(counts[i])].tolist()
+        assert got == ref

@@ -1,0 +1,150 @@
+"""Sharding rules: PartitionSpec derivation, divisibility fallbacks."""
+import numpy as np
+import pytest
+
+import jax
+from jax.sharding import PartitionSpec as PS
+
+from repro.distributed.sharding import ShardingRules, default_rules, rules_for_config
+
+
+class FakeMesh:
+    """Duck-typed mesh: ShardingRules only reads .shape and .axis_names."""
+
+    def __init__(self, shape: dict):
+        self.shape = shape
+        self.axis_names = tuple(shape)
+
+
+def _mesh(multi=False):
+    return FakeMesh(
+        {"pod": 2, "data": 16, "model": 16} if multi else {"data": 16, "model": 16}
+    )
+
+
+def _rules(fsdp="none", multi=False):
+    mesh = _mesh(multi)
+    return ShardingRules(mesh, default_rules(mesh, fsdp))
+
+
+def _rules_cfg(arch, multi=False):
+    from repro.configs import get_config
+
+    mesh = _mesh(multi)
+    return ShardingRules(mesh, rules_for_config(mesh, get_config(arch)))
+
+
+def test_batch_sharding():
+    r = _rules()
+    assert r.spec_for(("batch", "seq"), (256, 4096)) == PS("data", None)
+
+
+def test_batch_multi_pod():
+    r = _rules(multi=True)
+    assert r.spec_for(("batch", "seq"), (256, 4096)) == PS(("pod", "data"), None)
+
+
+def test_batch_too_small_falls_back():
+    r = _rules(multi=True)
+    # B=32 shards over (pod, data)=32; B=16 only over pod? prefix logic: the
+    # longest divisible prefix of ("pod","data") for 16 is ("pod",) = 2... 16%2==0
+    assert r.spec_for(("batch", "seq"), (32, 128)) == PS(("pod", "data"), None)
+    assert r.spec_for(("batch", "seq"), (1, 128)) == PS(None, None)
+
+
+def test_heads_shard_when_divisible():
+    r = _rules()
+    spec = r.spec_for(("embed", "heads", "head_dim"), (4096, 32, 128))
+    assert spec == PS(None, "model", None)
+
+
+def test_heads_fallback_padded_activation_tp():
+    """40 or 56 heads don't divide 16: the whole arch switches to
+    padded-activation head TP (rules_for_config — one consistent decision):
+    attention WEIGHTS replicate over model (FSDP shards embed), and the
+    padded attention ACTIVATIONS shard heads_act on model."""
+    for arch, h, d, pad in [("phi3-medium-14b", 40, 5120, 48),
+                            ("llava-next-34b", 56, 7168, 64)]:
+        r = _rules_cfg(arch)  # both archs use fsdp -> embed sharded on data
+        q = r.spec_for(("embed", "heads", "head_dim"), (d, h, 128))
+        assert q == PS("data", None, None), (arch, q)
+        kv = r.spec_for(("embed", "kv_heads", "head_dim"), (d, 8, 128))
+        assert kv == PS("data", None, None), (arch, kv)
+        # padded activations shard the model axis
+        act = r.spec_for(("batch", None, "heads_act", None), (256, 1024, pad, 128))
+        assert act == PS("data", None, "model", None), (arch, act)
+
+
+def test_decode_cache_seq_sharded():
+    """GQA decode caches shard the sequence dim when kv doesn't divide."""
+    r = _rules_cfg("llama3.2-1b")
+    spec = r.spec_for(("batch", "seq_kv", "kv_heads", "head_dim"), (128, 32768, 8, 64))
+    assert spec == PS("data", "model", None, None)
+    # MHA (kv=32) prefers kv sharding; seq stays unsharded
+    r2 = _rules_cfg("musicgen-large")
+    spec2 = r2.spec_for(("batch", "seq_kv", "kv_heads", "head_dim"), (128, 32768, 32, 64))
+    assert spec2[2] == "model" and spec2[1] is None
+
+
+def test_small_kv_heads_replicated():
+    """GQA kv=8 on a 16-way model axis: kv replicated, Q still head-sharded
+    (NOT a per-tensor head_dim fallback — that would desync Q vs K/V)."""
+    r = _rules_cfg("llama3.2-1b")  # fsdp=data -> embed on data
+    q = r.spec_for(("embed", "heads", "head_dim"), (2048, 32, 64))
+    assert q == PS("data", "model", None)
+    kv = r.spec_for(("embed", "kv_heads", "head_dim"), (2048, 8, 64))
+    assert kv == PS("data", None, None)
+
+
+def test_fsdp_embeds():
+    r = _rules(fsdp="data")
+    spec = r.spec_for(("embed", "mlp"), (4096, 14336))
+    assert spec == PS("data", "model")
+    r0 = _rules(fsdp="none")
+    assert r0.spec_for(("embed", "mlp"), (4096, 14336)) == PS(None, "model")
+
+
+def test_fsdp_pod_data_multi():
+    r = _rules(fsdp="pod_data", multi=True)
+    spec = r.spec_for(("embed", "mlp"), (8192, 29568))
+    assert spec == PS(("pod", "data"), "model")
+
+
+def test_no_axis_used_twice():
+    r = _rules()
+    spec = r.spec_for(("vocab", "embed"), (151936, 2048))
+    used = [s for s in spec if s is not None]
+    flat = []
+    for s in used:
+        flat.extend(s if isinstance(s, tuple) else [s])
+    assert len(flat) == len(set(flat))
+
+
+def test_moe_expert_sharding():
+    r = _rules()
+    spec = r.spec_for(("experts", "embed", "expert_mlp"), (128, 2048, 768))
+    assert spec == PS("model", None, None)
+
+
+def test_one_dim_params_replicated():
+    r = _rules()
+    assert r.spec_for(("embed",), (4096,)) == PS(None)
+
+
+def test_stack_dim_never_sharded():
+    r = _rules()
+    spec = r.spec_for(("stack", "embed", "mlp"), (48, 2048, 768))
+    assert spec[0] is None
+
+
+def test_cache_template_shardings():
+    """Decode-cell cache specs derive cleanly for every arch."""
+    from repro.configs import ARCHS, get_config
+    from repro.models import transformer as tfm
+
+    r = _rules()
+    for arch in ARCHS:
+        cfg = get_config(arch)
+        tpls = tfm.stack_cache_template(cfg, 128, 1024)
+        specs = [r.pspec_tree(t) for t in tpls]
+        assert len(specs) == len(tpls)
