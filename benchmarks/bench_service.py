@@ -1,0 +1,95 @@
+"""Service-level benchmark: end-to-end ingest vs raw device chunking.
+
+Measures, on a synthetic file-version corpus (the related repos' workload):
+
+* raw chunking MB/s    — ``boundaries_batch`` on fixed device batches, the
+  ceiling set by the accelerator pipeline alone;
+* service ingest MB/s  — the full DedupService path (scheduler batching,
+  host SHA-256, store, recipe commit), i.e. what a client actually sees;
+* restore MB/s         — reassembly + whole-object verification.
+
+The gap between the first two is the host-side tax (hashing dominates); the
+benchmark exists so regressions in the scheduler or store show up as a
+throughput number, not an anecdote.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core.automaton import max_chunks_for
+from repro.core.params import derived_params
+from repro.core.seqcdc import boundaries_batch
+from repro.data.corpus import snapshot_series
+from repro.service import DedupService
+
+from . import common
+
+
+def _versions(budget: str):
+    base_mb, snaps = (2, 4) if budget == "small" else (16, 8)
+    return list(snapshot_series(base_bytes=base_mb << 20, snapshots=snaps,
+                                edit_rate=5e-5, seed=7))
+
+
+def _raw_chunking_gbps(corpus: np.ndarray, params, seg: int = 1 << 20,
+                       batch: int = 8) -> float:
+    import jax
+    import jax.numpy as jnp
+
+    n_seg = len(corpus) // seg
+    segs = corpus[: n_seg * seg].reshape(n_seg, seg)
+    mc = max_chunks_for(seg, params)
+    fn = jax.jit(lambda x: boundaries_batch(x, params, max_chunks=mc))
+
+    def run():
+        for i in range(0, n_seg - batch + 1, batch):
+            b, c = fn(jnp.asarray(segs[i : i + batch]))
+        jax.block_until_ready(c)
+
+    nbytes = (n_seg // batch) * batch * seg
+    return common.time_throughput(run, nbytes)["gbps"]
+
+
+def run(budget: str = "small") -> None:
+    params = derived_params(8192)
+    versions = _versions(budget)
+    corpus = np.concatenate(versions)
+    total = int(corpus.size)
+
+    raw_gbps = _raw_chunking_gbps(corpus, params)
+
+    rows = []
+    for with_fp in (False, True):
+        # warmup pass compiles the per-bucket programs, then a timed cold store
+        for _ in range(2):
+            svc = DedupService(params=params, slots=8, with_fingerprints=with_fp)
+            t0 = time.perf_counter()
+            for i, v in enumerate(versions):
+                svc.submit(f"v{i:03d}", v)
+            svc.flush()
+            ingest_s = time.perf_counter() - t0
+        st = svc.stats()
+
+        t0 = time.perf_counter()
+        for i in range(len(versions)):
+            svc.get(f"v{i:03d}")
+        restore_s = time.perf_counter() - t0
+
+        rows.append({
+            "budget": budget,
+            "fingerprints": int(with_fp),
+            "corpus_mb": total / common.MiB,
+            "versions": len(versions),
+            "raw_chunk_gbps": raw_gbps,
+            "ingest_gbps": total / ingest_s / 1e9,
+            "restore_gbps": total / restore_s / 1e9,
+            "dedup_ratio": st.dedup_ratio,
+            "batch_occupancy": st.batch_occupancy,
+        })
+    common.emit(rows, "service: end-to-end ingest vs raw chunking")
+
+
+if __name__ == "__main__":
+    run("small")

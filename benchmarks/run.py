@@ -19,6 +19,7 @@ MODULES = [
     "bench_shift",          # SSIV
     "bench_intrinsics",     # SSV microbench (VPU analogue)
     "bench_pipeline",       # framework-level (ingest + checkpoint)
+    "bench_service",        # streaming dedup service (docs/SERVICE.md)
 ]
 
 

@@ -58,7 +58,18 @@ def _padded_blocks(cand: jax.Array, opp: jax.Array, n: int, p: SeqCDCParams):
 
 
 def _resolve(k, c, s, kc, kt, bend, in_block, n, p: SeqCDCParams):
-    """Shared event-resolution logic given first-candidate kc / trigger kt."""
+    """Shared event-resolution logic given first-candidate kc / trigger kt.
+
+    A trigger whose skip landing reaches the cut position is itself a cut:
+    the scalar algorithm checks ``k + L > s + max_size`` *before* reading a
+    window, so a skip from ``kt`` to ``kt + SkipSize >= cut_k`` cuts at
+    ``cut_b`` without consulting any byte in between.  Resolving that here
+    (rather than letting the landing position carry into a later block)
+    keeps the scan position <= cut_k, which is what guarantees every event
+    advances past its block: a deferred cut would rescan from
+    ``cut_b + sub_min_skip``, *behind* blocks the scan already consumed,
+    whenever SkipSize exceeds min_size (legal parameters, outside Table I).
+    """
     L = p.seq_length
     cut_b = jnp.minimum(s + p.max_size, n)
     cut_k = cut_b - (L - 1)  # first scan position that cuts
@@ -66,10 +77,12 @@ def _resolve(k, c, s, kc, kt, bend, in_block, n, p: SeqCDCParams):
     fire_cut = in_block & (e_cut < bend) & (e_cut <= jnp.minimum(kc, kt))
     fire_cand = in_block & ~fire_cut & (kc < kt)
     fire_trig = in_block & ~fire_cut & ~fire_cand & (kt < _BIG)
+    trig_cuts = fire_trig & (kt + p.skip_size >= cut_k)  # overshooting skip
+    emit_cut = fire_cut | trig_cuts
     bound_cand = kc + L
-    new_s = jnp.where(fire_cut, cut_b, jnp.where(fire_cand, bound_cand, s))
+    new_s = jnp.where(emit_cut, cut_b, jnp.where(fire_cand, bound_cand, s))
     new_k = jnp.where(
-        fire_cut,
+        emit_cut,
         cut_b + p.sub_min_skip,
         jnp.where(
             fire_cand,
@@ -77,8 +90,8 @@ def _resolve(k, c, s, kc, kt, bend, in_block, n, p: SeqCDCParams):
             jnp.where(fire_trig, kt + p.skip_size, jnp.where(in_block, bend, k)),
         ),
     )
-    emit = fire_cut | fire_cand
-    bound = jnp.where(fire_cut, cut_b, bound_cand)
+    emit = emit_cut | fire_cand
+    bound = jnp.where(emit_cut, cut_b, bound_cand)
     any_event = fire_cut | fire_cand | fire_trig
     return new_k, new_s, emit, bound, any_event
 

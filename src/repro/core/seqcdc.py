@@ -53,6 +53,9 @@ def boundaries_two_phase(
 ) -> tuple[jax.Array, jax.Array]:
     """Vectorized SeqCDC.  ``data``: (n,) uint8.  Returns (bounds, count)."""
     n = data.shape[-1]
+    if n == 0:  # static: an empty stream has no chunks
+        mc = max_chunks or automaton.max_chunks_for(n, p)
+        return jnp.full((mc,), _BIG, dtype=jnp.int32), jnp.int32(0)
     cand, opp = _compute_masks(data, p, mask_impl)
     return automaton.select_boundaries(
         cand, opp, n, p, step_impl=step_impl, max_chunks=max_chunks
@@ -141,9 +144,19 @@ def boundaries_batch(
 
 
 def bounds_to_numpy(bounds, count) -> "list":
-    """Strip sentinel padding host-side -> python list of int boundaries."""
+    """Strip sentinel padding host-side -> python list(s) of int boundaries.
+
+    Accepts either a single stream's ``(max_chunks,) + scalar count`` (returns
+    a flat list) or the batched layout from :func:`boundaries_batch`,
+    ``(B, max_chunks) + (B,)`` (returns a list of B lists) — the host-side
+    exit point for both the single-stream and batch entry points.
+    """
     import numpy as np
 
     b = np.asarray(bounds)
-    c = int(count)
-    return b[:c].astype(np.int64).tolist()
+    c = np.asarray(count)
+    if b.ndim == 1:
+        return b[: int(c)].astype(np.int64).tolist()
+    if b.ndim != 2 or c.shape != b.shape[:1]:
+        raise ValueError(f"bad bounds/count shapes: {b.shape} / {c.shape}")
+    return [row[: int(k)].astype(np.int64).tolist() for row, k in zip(b, c)]

@@ -31,7 +31,7 @@ class BlockStore:
     def put(self, chunk: bytes) -> str:
         key = sha256_key(chunk)
         self.logical_bytes += len(chunk)
-        if key not in self.blocks:
+        if key not in self.refs:
             self.blocks[key] = bytes(chunk)
             self.stored_bytes += len(chunk)
             self.refs[key] = 0
@@ -40,6 +40,40 @@ class BlockStore:
 
     def get(self, key: str) -> bytes:
         return self.blocks[key]
+
+    def __contains__(self, key: str) -> bool:
+        return key in self.refs
+
+    def chunk_size(self, key: str) -> int:
+        return len(self.blocks[key])
+
+    def _remove_block(self, key: str):
+        del self.blocks[key]
+
+    def scan_keys(self) -> list[str]:
+        """Every key the store physically holds (GC sweep domain).
+
+        For file-backed stores this includes blocks present on disk but
+        missing from the refcount manifest (a crash between block write and
+        manifest sync), which refcount iteration alone would never see.
+        """
+        return list(self.refs)
+
+    def repair_ref(self, key: str, refs: int):
+        """Set a key's refcount to the recomputed truth, fixing accounting.
+
+        Re-adopts blocks that exist but fell out of the manifest (crash
+        between block write and manifest sync): their bytes re-enter
+        ``stored_bytes``/``logical_bytes`` so the live totals match refs.
+        """
+        size = self.chunk_size(key)
+        have = self.refs.get(key)
+        if have is None:
+            self.stored_bytes += size
+            self.logical_bytes += refs * size
+        else:
+            self.logical_bytes += (refs - have) * size
+        self.refs[key] = refs
 
     def put_stream(self, data, bounds: Iterable[int]) -> list[str]:
         """Chunk-and-store a byte stream given exclusive boundary offsets."""
@@ -54,12 +88,46 @@ class BlockStore:
     def get_stream(self, keys: Iterable[str]) -> bytes:
         return b"".join(self.blocks[k] for k in keys)
 
-    def release(self, key: str):
+    def release(self, key: str) -> bool:
+        """Drop one reference; free the block on the last one.
+
+        Safe on unknown keys (returns False, no accounting change) so callers
+        replaying a partially-applied delete never crash.  ``logical_bytes``
+        shrinks by one reference's worth per release and ``stored_bytes`` by
+        the block size when it is freed, so both remain *live* totals after
+        deletes (freeing everything returns both to zero).
+        """
+        if key not in self.refs:
+            return False
+        size = self.chunk_size(key)
+        self.logical_bytes -= size
         self.refs[key] -= 1
-        if self.refs[key] == 0:
-            blk = self.blocks.pop(key)
-            self.stored_bytes -= len(blk)
-            del self.refs[key]
+        if self.refs[key] > 0:
+            return False
+        del self.refs[key]
+        self._remove_block(key)
+        self.stored_bytes -= size
+        return True
+
+    def delete(self, key: str) -> bool:
+        """Alias for :meth:`release` (service-facing name)."""
+        return self.release(key)
+
+    def drop(self, key: str) -> int:
+        """GC sweep: remove a block unconditionally, whatever its refcount.
+
+        Used by mark-and-sweep when recomputed liveness says the block has no
+        referents (e.g. refcount drift after a crash).  Returns the stored
+        bytes reclaimed (0 for unknown keys).
+        """
+        if key not in self.refs:
+            return 0
+        size = self.chunk_size(key)
+        refs = self.refs.pop(key)
+        self._remove_block(key)
+        self.stored_bytes -= size
+        self.logical_bytes -= refs * size
+        return size
 
     @property
     def savings(self) -> float:
@@ -111,13 +179,36 @@ class DirBlockStore(BlockStore):
     def get_stream(self, keys: Iterable[str]) -> bytes:
         return b"".join(self.get(k) for k in keys)
 
-    def release(self, key: str):
-        self.refs[key] -= 1
-        if self.refs[key] == 0:
-            blk_path = self._path(key)
-            self.stored_bytes -= os.path.getsize(blk_path)
-            os.remove(blk_path)
-            del self.refs[key]
+    def chunk_size(self, key: str) -> int:
+        return os.path.getsize(self._path(key))
+
+    def _remove_block(self, key: str):
+        os.remove(self._path(key))
+
+    def scan_keys(self) -> list[str]:
+        """Manifest keys plus any block files on disk the manifest missed.
+
+        Stale ``.tmp`` files are torn writes by construction (commits go
+        through atomic rename) and are unlinked during the scan.
+        """
+        keys = set(self.refs)
+        blocks_dir = os.path.join(self.root, "blocks")
+        for fn in os.listdir(blocks_dir):
+            if fn.endswith(".tmp"):
+                os.remove(os.path.join(blocks_dir, fn))
+            else:
+                keys.add(fn)
+        return sorted(keys)
+
+    def drop(self, key: str) -> int:
+        if key in self.refs:
+            return super().drop(key)
+        path = self._path(key)  # on-disk orphan: never entered the accounting
+        if not os.path.exists(path):
+            return 0
+        size = os.path.getsize(path)
+        os.remove(path)
+        return size
 
     def sync_manifest(self):
         tmp = self._manifest_path + ".tmp"

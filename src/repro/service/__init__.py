@@ -1,0 +1,15 @@
+"""repro.service — streaming dedup service on top of SeqCDC (docs/SERVICE.md).
+
+Layers: ChunkScheduler (batched device chunking) -> BlockStore (content
+addressed, refcounted) -> RecipeTable (object manifests, GC roots), fronted
+by DedupService (put/get/stat/delete + mark-and-sweep gc).
+"""
+from .api import (  # noqa: F401
+    DedupService,
+    GCStats,
+    IntegrityError,
+    ObjectStat,
+    ServiceStats,
+)
+from .objects import ObjectRecipe, RecipeTable  # noqa: F401
+from .scheduler import ChunkResult, ChunkScheduler, SchedulerStats  # noqa: F401

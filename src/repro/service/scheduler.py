@@ -1,0 +1,244 @@
+"""Batched chunking scheduler: length-bucketed continuous batching for SeqCDC.
+
+The serving problem: dedup traffic is a stream of *variable-length* byte
+objects, but the TPU pipeline (``boundaries_batch`` — the vmapped two-phase
+SeqCDC — plus vmapped ``chunk_fingerprints``) wants fixed ``(B, S)`` device
+batches so one compiled XLA program stays hot.  This module bridges the two
+with the same slot discipline as ``serve/engine.py``: requests queue per
+*length bucket* (power-of-two padded length), a bucket dispatches the moment
+its ``slots`` rows fill, and ``drain`` flushes partial buckets padded with
+zero rows.  Distinct device shapes stay logarithmic in the stream-length
+range, so the jit cache is tiny and every dispatch after warmup is a replay.
+
+Exactness under padding (the part that is not just batching): chunking a
+stream padded to bucket size S is *not* the same as chunking the stream —
+the max-size/file-end cut consults the stream end.  But SeqCDC is memoryless
+at chunk starts, so the decision for a chunk starting at ``s`` depends only
+on bytes ``[s, s + max_size]``; while ``s + max_size <= n`` (true length),
+the padded run and the exact run see identical windows and emit identical
+boundaries.  The scheduler therefore keeps padded boundaries up to the last
+chunk start with a full in-bounds window and re-chunks only the final
+``< max_size`` tail with the event-driven host oracle (bit-identical to the
+device pipeline by the tier-1 equivalence suite).  Result: boundaries (and
+fingerprints) bit-identical to per-stream ``boundaries_two_phase``, at
+device-batch throughput.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import oracle
+from repro.core.automaton import max_chunks_for
+from repro.core.params import SeqCDCParams
+from repro.core.seqcdc import MaskImpl, StepImpl, boundaries_batch
+from repro.dedup.fingerprint import MAX_CHUNK, chunk_fingerprints, fingerprints_numpy
+
+
+@functools.partial(
+    jax.jit, static_argnames=("p", "mc", "mask_impl", "step_impl", "with_fp")
+)
+def _device_chunk(x, *, p, mc, mask_impl, step_impl, with_fp):
+    """(B, S) uint8 -> (bounds, counts[, fps, lens]).  One module-level jit
+    (not a per-scheduler closure) so the compile cache is shared: a device
+    shape compiles once per process, not once per service instance.
+    """
+    bounds, counts = boundaries_batch(
+        x, p, mask_impl=mask_impl, step_impl=step_impl, max_chunks=mc
+    )
+    if not with_fp:
+        return bounds, counts, None, None
+    fps, lens = jax.vmap(
+        lambda d, b, c: chunk_fingerprints(d, b, c, max_chunks=mc)
+    )(x, bounds, counts)
+    return bounds, counts, fps, lens
+
+
+@dataclasses.dataclass
+class ChunkRequest:
+    seq: int  # submission order (results are returned in this order)
+    tag: Any
+    data: np.ndarray  # (n,) uint8
+
+
+@dataclasses.dataclass
+class ChunkResult:
+    """Exact chunking of one stream: what the store/restore path consumes."""
+
+    tag: Any
+    data: np.ndarray  # the original stream (uint8)
+    bounds: np.ndarray  # (C,) int64 exclusive chunk ends, bounds[-1] == size
+    fps: np.ndarray  # (C, 2) uint32 accelerator fingerprints
+    lengths: np.ndarray  # (C,) int64 chunk lengths
+
+    @property
+    def size(self) -> int:
+        return int(self.data.size)
+
+
+@dataclasses.dataclass
+class SchedulerStats:
+    dispatches: int = 0
+    padded_rows: int = 0  # zero rows used to square off partial batches
+    device_bytes: int = 0  # bytes shipped to the device (incl. padding)
+    stream_bytes: int = 0  # real payload bytes
+    tail_bytes: int = 0  # bytes re-chunked host-side (exactness fixup)
+
+    @property
+    def occupancy(self) -> float:
+        """Real payload fraction of device traffic (batching efficiency)."""
+        return self.stream_bytes / self.device_bytes if self.device_bytes else 0.0
+
+
+class ChunkScheduler:
+    """Length-bucketed continuous batching over the vmapped SeqCDC pipeline."""
+
+    def __init__(
+        self,
+        params: SeqCDCParams | None = None,
+        *,
+        slots: int = 8,
+        min_bucket: int = 1 << 14,
+        max_batch_bytes: int = 8 << 20,
+        mask_impl: MaskImpl = "jnp",
+        step_impl: StepImpl = "wide",
+        with_fingerprints: bool = True,
+    ):
+        from repro.core.params import derived_params
+
+        self.params = params or derived_params(8192)
+        if with_fingerprints and self.params.max_size > MAX_CHUNK:
+            raise ValueError(
+                f"max_size {self.params.max_size} exceeds the fingerprint "
+                f"limit {MAX_CHUNK}; pass with_fingerprints=False"
+            )
+        self.slots = slots
+        self.max_batch_bytes = max_batch_bytes
+        self.min_bucket = max(min_bucket, self.params.max_size)
+        self.mask_impl = mask_impl
+        self.step_impl = step_impl
+        self.with_fingerprints = with_fingerprints
+        self.stats = SchedulerStats()
+        self._pending: Dict[int, List[ChunkRequest]] = {}
+        self._ready: List[tuple[int, ChunkResult]] = []
+        self._jit_cache: Dict[int, Any] = {}
+        self._next_seq = 0
+
+    # -- public -----------------------------------------------------------------
+    def submit(self, data, tag: Any = None) -> int:
+        """Queue one stream for chunking; dispatches when its bucket fills."""
+        arr = np.ascontiguousarray(data, dtype=np.uint8).reshape(-1)
+        seq = self._next_seq
+        self._next_seq += 1
+        self.stats.stream_bytes += arr.size
+        if arr.size == 0:  # no chunks; never touches the device
+            empty = np.zeros(0, dtype=np.int64)
+            self._ready.append(
+                (seq, ChunkResult(tag, arr, empty,
+                                  np.zeros((0, 2), dtype=np.uint32), empty))
+            )
+            return seq
+        bucket = self._bucket_for(arr.size)
+        q = self._pending.setdefault(bucket, [])
+        q.append(ChunkRequest(seq, tag, arr))
+        if len(q) >= self._slots_for(bucket):
+            self._dispatch(bucket)
+        return seq
+
+    def drain(self) -> List[ChunkResult]:
+        """Flush every partial bucket and return all results, FIFO order."""
+        for bucket in sorted(self._pending):
+            if self._pending[bucket]:
+                self._dispatch(bucket)
+        self._ready.sort(key=lambda t: t[0])
+        out = [r for _, r in self._ready]
+        self._ready.clear()
+        return out
+
+    # -- internals ----------------------------------------------------------------
+    def _bucket_for(self, n: int) -> int:
+        # two buckets per octave ({1, 1.5} x 2^k): caps row padding at 50%
+        # while keeping the set of compiled device shapes logarithmic
+        b = self.min_bucket
+        while b < n:
+            if n <= b + (b >> 1):
+                return b + (b >> 1)
+            b <<= 1
+        return b
+
+    def _slots_for(self, bucket: int) -> int:
+        """Rows per device batch: ``slots``, capped so a batch stays within
+        ``max_batch_bytes`` (big streams dispatch in small, even solo, rows
+        rather than waiting to fill a huge batch)."""
+        return max(1, min(self.slots, self.max_batch_bytes // bucket))
+
+    def _device_fn(self, bucket: int):
+        fn = self._jit_cache.get(bucket)
+        if fn is None:
+            fn = functools.partial(
+                _device_chunk,
+                p=self.params,
+                mc=max_chunks_for(bucket, self.params),
+                mask_impl=self.mask_impl,
+                step_impl=self.step_impl,
+                with_fp=self.with_fingerprints,
+            )
+            self._jit_cache[bucket] = fn
+        return fn
+
+    def _dispatch(self, bucket: int):
+        rows = self._slots_for(bucket)
+        reqs = self._pending[bucket]
+        self._pending[bucket] = []
+        batch = np.zeros((rows, bucket), dtype=np.uint8)
+        for row, r in enumerate(reqs):
+            batch[row, : r.data.size] = r.data
+        bounds, counts, fps, lens = self._device_fn(bucket)(jnp.asarray(batch))
+        bounds = np.asarray(bounds)
+        counts = np.asarray(counts)
+        if fps is not None:
+            fps, lens = np.asarray(fps), np.asarray(lens)
+        self.stats.dispatches += 1
+        self.stats.device_bytes += batch.size
+        self.stats.padded_rows += rows - len(reqs)
+        for row, r in enumerate(reqs):
+            self._ready.append((r.seq, self._exactify(
+                r, bounds[row, : counts[row]],
+                fps[row] if fps is not None else None,
+            )))
+
+    def _exactify(self, req: ChunkRequest, padded: np.ndarray,
+                  padded_fps: np.ndarray | None) -> ChunkResult:
+        """Trim a padded-run boundary list to the exact per-stream result."""
+        n = req.data.size
+        p = self.params
+        kept = 0
+        s = 0
+        for b in padded:
+            if s + p.max_size > n:
+                break
+            kept += 1
+            s = int(b)
+        if s == n:  # stream length hit a boundary exactly: nothing to redo
+            bounds = padded[:kept].astype(np.int64)
+            tail_rel = np.zeros(0, dtype=np.int64)
+        else:
+            tail_rel = oracle.boundaries_numpy(req.data[s:], p)
+            self.stats.tail_bytes += n - s
+            bounds = np.concatenate([padded[:kept].astype(np.int64), tail_rel + s])
+        lengths = np.diff(np.concatenate([[0], bounds]))
+        if padded_fps is None:
+            fps = np.zeros((0, 2), dtype=np.uint32)
+        elif tail_rel.size:
+            fps = np.concatenate([
+                padded_fps[:kept],
+                fingerprints_numpy(req.data[s:], tail_rel),
+            ])
+        else:
+            fps = padded_fps[:kept].copy()
+        return ChunkResult(req.tag, req.data, bounds, fps, lengths)

@@ -1,0 +1,80 @@
+"""Deterministic stand-in for ``hypothesis`` when it is not installed.
+
+The tier-1 suite property-tests the SeqCDC implementations with hypothesis
+when available; in environments without it (this container bakes only the
+jax toolchain) we still want the property tests to *run* rather than skip,
+so this module provides ``given`` / ``settings`` / ``strategies`` with the
+same call surface, drawing examples from a seeded ``numpy`` generator.
+
+No shrinking, no example database — just a fixed, reproducible sweep of
+``max_examples`` random draws per test (seeded from the test name, so every
+run explores the same inputs and failures are replayable).
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import types
+import zlib
+
+import numpy as np
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def draw(self, rng: np.random.Generator):
+        return self._draw(rng)
+
+
+def _binary(min_size: int = 0, max_size: int = 64) -> _Strategy:
+    def draw(rng):
+        n = int(rng.integers(min_size, max_size + 1))
+        return rng.integers(0, 256, n, dtype=np.uint8).tobytes()
+
+    return _Strategy(draw)
+
+
+def _integers(min_value: int, max_value: int) -> _Strategy:
+    return _Strategy(lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+
+def _sampled_from(elements) -> _Strategy:
+    seq = list(elements)
+    return _Strategy(lambda rng: seq[int(rng.integers(len(seq)))])
+
+
+strategies = types.SimpleNamespace(
+    binary=_binary, integers=_integers, sampled_from=_sampled_from
+)
+
+
+def settings(max_examples: int = 20, deadline=None, **_ignored):
+    def deco(fn):
+        fn._max_examples = max_examples
+        return fn
+
+    return deco
+
+
+def given(**strats):
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            n = getattr(wrapper, "_max_examples", 20)
+            seed = zlib.crc32(fn.__qualname__.encode())
+            rng = np.random.default_rng(seed)
+            for _ in range(n):
+                drawn = {k: s.draw(rng) for k, s in strats.items()}
+                fn(*args, **drawn, **kwargs)
+
+        # hide the strategy-filled params from pytest's fixture resolution
+        # (inspect.signature stops unwrapping at an explicit __signature__)
+        sig = inspect.signature(fn)
+        wrapper.__signature__ = sig.replace(parameters=[
+            p for name, p in sig.parameters.items() if name not in strats
+        ])
+        return wrapper
+
+    return deco

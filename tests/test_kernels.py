@@ -7,7 +7,11 @@ multi-tile grids.
 """
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # no hypothesis in this env: deterministic fallback
+    from _hyp_fallback import given, settings, strategies as st
 
 import jax.numpy as jnp
 

@@ -8,7 +8,11 @@ content-defined skip counter resets, sub-minimum regions, and max-size cuts.
 """
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # no hypothesis in this env: deterministic fallback
+    from _hyp_fallback import given, settings, strategies as st
 
 import jax.numpy as jnp
 
@@ -141,3 +145,78 @@ def test_batched_matches_single(rng):
         ref = oracle.boundaries_slow(data[i], SMALL)
         got = np.asarray(bounds[i])[: int(counts[i])].tolist()
         assert got == ref
+
+
+# -- batch entry points: edge cases vs the sequential backend -------------------
+
+def test_two_phase_empty_stream():
+    """n=0: zero chunks, sentinel-only bounds (both backends agree)."""
+    empty = jnp.zeros((0,), jnp.uint8)
+    b2, c2 = seqcdc.boundaries_two_phase(empty, SMALL)
+    bs, cs = seqcdc.boundaries_sequential(empty, SMALL)
+    assert int(c2) == int(cs) == 0
+    assert seqcdc.bounds_to_numpy(b2, c2) == []
+
+
+def test_batch_empty_streams():
+    bounds, counts = seqcdc.boundaries_batch(jnp.zeros((3, 0), jnp.uint8), SMALL)
+    assert bounds.shape[0] == 3
+    assert np.asarray(counts).tolist() == [0, 0, 0]
+    assert seqcdc.bounds_to_numpy(bounds, counts) == [[], [], []]
+
+
+@pytest.mark.parametrize("n", [1, 2])  # shorter than seq_length=3
+def test_batch_shorter_than_seq_length(n, rng):
+    data = rng.integers(0, 256, (3, n), dtype=np.uint8)
+    bounds, counts = seqcdc.boundaries_batch(jnp.asarray(data), SMALL)
+    for i, row in enumerate(seqcdc.bounds_to_numpy(bounds, counts)):
+        wb, wc = seqcdc.boundaries_sequential(jnp.asarray(data[i]), SMALL)
+        assert row == seqcdc.bounds_to_numpy(wb, wc) == [n]
+
+
+def test_batch_exactly_max_size(rng):
+    """Streams of exactly max_size bytes: single full-size chunk cases and
+    candidate-rich rows alike match the sequential backend."""
+    n = SMALL.max_size
+    rows = np.stack([
+        np.zeros(n, dtype=np.uint8),  # no candidates: one max-size cut
+        rng.integers(0, 256, n, dtype=np.uint8),
+        (np.arange(n) % 256).astype(np.uint8),
+    ])
+    bounds, counts = seqcdc.boundaries_batch(jnp.asarray(rows), SMALL)
+    got = seqcdc.bounds_to_numpy(bounds, counts)
+    for i in range(rows.shape[0]):
+        b, c = seqcdc.boundaries_sequential(jnp.asarray(rows[i]), SMALL)
+        assert got[i] == seqcdc.bounds_to_numpy(b, c)
+        assert got[i][-1] == n
+    assert got[0] == [n]  # constant row: exactly the max-size cut
+
+
+def test_batch_mixed_content_rows(rng):
+    """One device batch mixing random/constant/monotone/periodic rows equals
+    the sequential backend row by row (vmap has no cross-row leakage)."""
+    n = 4096
+    rows = np.stack([
+        rng.integers(0, 256, n, dtype=np.uint8),
+        np.zeros(n, dtype=np.uint8),
+        np.full(n, 255, dtype=np.uint8),
+        (np.arange(n) % 256).astype(np.uint8),
+        (255 - np.arange(n) % 256).astype(np.uint8),
+        np.tile(np.array([1, 2], dtype=np.uint8), n // 2),
+    ])
+    for params in (SMALL, SMALL_DEC):
+        bounds, counts = seqcdc.boundaries_batch(jnp.asarray(rows), params)
+        got = seqcdc.bounds_to_numpy(bounds, counts)
+        for i in range(rows.shape[0]):
+            b, c = seqcdc.boundaries_sequential(jnp.asarray(rows[i]), params)
+            assert got[i] == seqcdc.bounds_to_numpy(b, c), f"row {i}"
+
+
+def test_bounds_to_numpy_shapes():
+    b = jnp.asarray([[10, 20, 1 << 30], [5, 1 << 30, 1 << 30]], jnp.int32)
+    c = jnp.asarray([2, 1], jnp.int32)
+    assert seqcdc.bounds_to_numpy(b, c) == [[10, 20], [5]]
+    assert seqcdc.bounds_to_numpy(b[0], c[0]) == [10, 20]
+    assert seqcdc.bounds_to_numpy(b[0], 0) == []
+    with pytest.raises(ValueError):
+        seqcdc.bounds_to_numpy(b, jnp.asarray([1, 2, 3]))
