@@ -21,16 +21,12 @@ import numpy as np
 from repro.core.automaton import max_chunks_for
 from repro.core.params import derived_params
 from repro.core.seqcdc import boundaries_batch
-from repro.data.corpus import snapshot_series
 from repro.service import DedupService
 
 from . import common
 
-
-def _versions(budget: str):
-    base_mb, snaps = (2, 4) if budget == "small" else (16, 8)
-    return list(snapshot_series(base_bytes=base_mb << 20, snapshots=snaps,
-                                edit_rate=5e-5, seed=7))
+MASK_IMPL = "jnp"
+STEP_IMPL = "wide"
 
 
 def _raw_chunking_gbps(corpus: np.ndarray, params, seg: int = 1 << 20,
@@ -39,6 +35,9 @@ def _raw_chunking_gbps(corpus: np.ndarray, params, seg: int = 1 << 20,
     import jax.numpy as jnp
 
     n_seg = len(corpus) // seg
+    if n_seg == 0:
+        return 0.0
+    batch = min(batch, n_seg)  # small corpora: one partial-width batch
     segs = corpus[: n_seg * seg].reshape(n_seg, seg)
     mc = max_chunks_for(seg, params)
     fn = jax.jit(lambda x: boundaries_batch(x, params, max_chunks=mc))
@@ -54,7 +53,7 @@ def _raw_chunking_gbps(corpus: np.ndarray, params, seg: int = 1 << 20,
 
 def run(budget: str = "small") -> None:
     params = derived_params(8192)
-    versions = _versions(budget)
+    versions = common.version_corpus(budget)
     corpus = np.concatenate(versions)
     total = int(corpus.size)
 
@@ -64,7 +63,8 @@ def run(budget: str = "small") -> None:
     for with_fp in (False, True):
         # warmup pass compiles the per-bucket programs, then a timed cold store
         for _ in range(2):
-            svc = DedupService(params=params, slots=8, with_fingerprints=with_fp)
+            svc = DedupService(params=params, slots=8, with_fingerprints=with_fp,
+                               mask_impl=MASK_IMPL, step_impl=STEP_IMPL)
             t0 = time.perf_counter()
             for i, v in enumerate(versions):
                 svc.submit(f"v{i:03d}", v)
@@ -79,6 +79,9 @@ def run(budget: str = "small") -> None:
 
         rows.append({
             "budget": budget,
+            "shards": 1,
+            "mask_impl": MASK_IMPL,
+            "step_impl": STEP_IMPL,
             "fingerprints": int(with_fp),
             "corpus_mb": total / common.MiB,
             "versions": len(versions),

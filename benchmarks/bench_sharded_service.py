@@ -1,0 +1,105 @@
+"""Sharded service benchmark: shard-count scaling and async-vs-sync flush.
+
+Ingests the same synthetic file-version corpus into a
+``ShardedDedupService`` for every (shards, flush-mode) cell and measures
+what the scaling story actually delivers on this host:
+
+* ingest GB/s   — submit+flush end to end (device chunking + routing +
+                  per-shard store writes);
+* restore GB/s  — cross-shard gather + whole-object verification;
+* dedup ratio   — must be *identical* across all cells (fingerprint
+                  partitioning preserves exact dedup; a drift here is a
+                  correctness bug, not a perf result).
+
+Async flush moves SHA-256 hashing and block IO onto per-shard writer
+threads, so its win grows with shard count (more writers) and saturates at
+the host's core count / GIL contention point — which is the honest CPU
+story; on a multi-host deployment each shard's writer is a different
+machine.  Every row records ``mask_impl``/``step_impl``/``shards`` so
+BENCH_*.json trajectories are comparable across PRs.
+"""
+from __future__ import annotations
+
+import json
+import time
+
+from repro.core.params import derived_params
+from repro.service import ShardedDedupService
+
+from . import common
+
+MASK_IMPL = "jnp"
+STEP_IMPL = "wide"
+
+
+def _cell(versions, total: int, shards: int, async_flush: bool,
+          budget: str) -> dict:
+    params = derived_params(8192)
+    # warmup run compiles the per-bucket programs; second run is timed
+    for it in range(2):
+        svc = ShardedDedupService(shards, params=params, slots=8,
+                                  mask_impl=MASK_IMPL, step_impl=STEP_IMPL,
+                                  async_flush=async_flush)
+        t0 = time.perf_counter()
+        for i, v in enumerate(versions):
+            svc.submit(f"v{i:03d}", v)
+        svc.flush()
+        ingest_s = time.perf_counter() - t0
+        if it == 0:
+            svc.close()
+    st = svc.stats()
+
+    t0 = time.perf_counter()
+    for i in range(len(versions)):
+        svc.get(f"v{i:03d}")
+    restore_s = time.perf_counter() - t0
+
+    per = svc.shard_stats()
+    uniques = [s["unique_chunks"] for s in per]
+    svc.close()
+    return {
+        "budget": budget,
+        "shards": shards,
+        "async_flush": int(async_flush),
+        "mask_impl": MASK_IMPL,
+        "step_impl": STEP_IMPL,
+        "corpus_mb": total / common.MiB,
+        "ingest_gbps": total / ingest_s / 1e9,
+        "restore_gbps": total / restore_s / 1e9,
+        "dedup_ratio": st.dedup_ratio,
+        "stored_bytes": st.stored_bytes,
+        "unique_chunks": st.unique_chunks,
+        "shard_balance": min(uniques) / max(uniques) if max(uniques) else 1.0,
+    }
+
+
+def run(budget: str = "small") -> list:
+    versions = common.version_corpus(budget)
+    total = int(sum(v.size for v in versions))
+    rows = []
+    for shards in (1, 2, 4, 8):
+        for async_flush in (False, True):
+            rows.append(_cell(versions, total, shards, async_flush, budget))
+    ratios = {f"{r['dedup_ratio']:.9f}" for r in rows}
+    assert len(ratios) == 1, f"dedup ratio drifted across cells: {ratios}"
+    common.emit(rows, "sharded service: shard scaling + async vs sync flush")
+    return rows
+
+
+def main(argv=None) -> int:
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write the rows as a JSON array")
+    args = ap.parse_args(argv)
+    rows = run("full" if args.full else "small")
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(rows, f, indent=1)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -36,6 +36,15 @@ def dataset(name: str, mb: int) -> np.ndarray:
     return _CORPUS_CACHE[key]
 
 
+def version_corpus(budget: str) -> List[np.ndarray]:
+    """The shared service-benchmark workload: a synthetic file-version
+    series.  One definition so bench_service and bench_sharded_service rows
+    in BENCH_*.json are computed on the *same* corpus and stay comparable."""
+    base_mb, snaps = (2, 4) if budget == "small" else (16, 8)
+    return list(corpus_mod.snapshot_series(
+        base_bytes=base_mb * MiB, snapshots=snaps, edit_rate=5e-5, seed=7))
+
+
 def random_data(mb: int, seed: int = 0) -> np.ndarray:
     key = ("RAND", mb, seed)
     if key not in _CORPUS_CACHE:
@@ -45,9 +54,21 @@ def random_data(mb: int, seed: int = 0) -> np.ndarray:
     return _CORPUS_CACHE[key]
 
 
+#: rows collected across every emit() since the last reset — the harness
+#: (benchmarks/run.py) serializes these into BENCH_*.json so per-PR
+#: trajectories are machine-comparable, not just stdout CSV.
+RESULTS: List[Dict] = []
+
+
+def reset_results():
+    RESULTS.clear()
+
+
 def emit(rows: List[Dict], title: str):
     if not rows:
         return
+    for r in rows:
+        RESULTS.append({"bench": title, **r})
     cols = list(rows[0])
     print(f"\n# {title}")
     print(",".join(cols))

@@ -1,37 +1,65 @@
 """Benchmark harness entry point: one module per paper table/figure.
 
-  python -m benchmarks.run            # default (small) budget
-  python -m benchmarks.run --full     # paper-scale corpora
+  python -m benchmarks.run                      # default (small) budget
+  python -m benchmarks.run --full               # paper-scale corpora
   python -m benchmarks.run --only bench_chunking
+  python -m benchmarks.run --json BENCH_pr2.json
+
+Besides the stdout CSV, every run serializes all collected rows into one
+JSON file (default ``BENCH_<budget>.json``) with a meta header recording
+backend and the pipeline configuration defaults (``mask_impl`` /
+``step_impl`` / ``shards``).  Rows that exercise a non-default
+configuration carry their own ``mask_impl``/``step_impl``/``shards``
+fields (the service benchmarks do); consumers should fall back to the
+meta defaults for rows that don't.  This is what makes BENCH_*.json
+trajectories comparable across PRs: a throughput delta can be attributed
+to the code or to a config change, not guessed at.
 """
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import time
 
 MODULES = [
-    "bench_calibrate",      # Table I / SSV
-    "bench_chunking",       # Figs 1, 7, 8, 9, 12
-    "bench_space_savings",  # Figs 5, 6 / Table III
-    "bench_breakdown",      # Fig 10
-    "bench_distribution",   # Fig 11
-    "bench_shift",          # SSIV
-    "bench_intrinsics",     # SSV microbench (VPU analogue)
-    "bench_pipeline",       # framework-level (ingest + checkpoint)
-    "bench_service",        # streaming dedup service (docs/SERVICE.md)
+    "bench_calibrate",        # Table I / SSV
+    "bench_chunking",         # Figs 1, 7, 8, 9, 12
+    "bench_space_savings",    # Figs 5, 6 / Table III
+    "bench_breakdown",        # Fig 10
+    "bench_distribution",     # Fig 11
+    "bench_shift",            # SSIV
+    "bench_intrinsics",       # SSV microbench (VPU analogue)
+    "bench_pipeline",         # framework-level (ingest + checkpoint)
+    "bench_service",          # streaming dedup service (docs/SERVICE.md)
+    "bench_sharded_service",  # sharded service (docs/SHARDING.md)
 ]
+
+#: configuration every benchmark uses unless its rows say otherwise
+DEFAULTS = {"mask_impl": "jnp", "step_impl": "wide", "shards": 1}
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--only", default=None)
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="output JSON path (default BENCH_<budget>.json)")
     args = ap.parse_args()
     budget = "full" if args.full else "small"
+    # a --only run gets its own default file so iterating on one module
+    # never clobbers the canonical full-run trajectory
+    json_path = args.json or (
+        f"BENCH_{budget}.json" if args.only is None
+        else f"BENCH_{budget}_{args.only}.json"
+    )
 
+    from . import common
+
+    common.reset_results()
     mods = [m for m in MODULES if args.only is None or args.only in m]
     ok = True
+    failures = []
     for name in mods:
         mod = __import__(f"benchmarks.{name}", fromlist=["run"])
         t0 = time.time()
@@ -40,7 +68,24 @@ def main() -> None:
             print(f"## {name} done in {time.time()-t0:.1f}s", file=sys.stderr)
         except Exception as e:  # pragma: no cover
             ok = False
+            failures.append(name)
             print(f"## {name} FAILED: {type(e).__name__}: {e}", file=sys.stderr)
+
+    import jax
+
+    report = {
+        "meta": {
+            "budget": budget,
+            "backend": jax.default_backend(),
+            "modules": mods,
+            "failed_modules": failures,
+            "defaults": dict(DEFAULTS),
+        },
+        "results": common.RESULTS,
+    }
+    with open(json_path, "w") as f:
+        json.dump(report, f, indent=1)
+    print(f"## wrote {len(common.RESULTS)} rows to {json_path}", file=sys.stderr)
     if not ok:
         raise SystemExit(1)
 

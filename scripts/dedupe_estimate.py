@@ -29,12 +29,17 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 from repro.service import DedupService  # noqa: E402
 
 
-def iter_files(paths, max_file_bytes: int):
+def iter_files(paths, max_file_bytes: int, skipped: dict | None = None):
     """Deterministic walk: (object name, path) for every regular file.
 
     Names are unique across all roots (root label prefix when several paths
     are given, ``#N`` suffix on residual collisions) so same-named files
     never silently overwrite each other in the estimate.
+
+    Symlinks, files over ``max_file_bytes``, and unreadable entries are
+    excluded from the walk — and *counted* into ``skipped`` (keys ``files``
+    / ``bytes``) when given, so the report can say what the estimate omits
+    instead of silently under-measuring.
     """
     seen: dict = {}
 
@@ -42,8 +47,14 @@ def iter_files(paths, max_file_bytes: int):
         if name not in seen:
             seen[name] = 1
             return name
-        seen[name] += 1
-        return f"{name}#{seen[name]}"
+        # probe until free: a generated "<name>#N" can itself collide with a
+        # real file literally named that way, so record every result in seen
+        while True:
+            seen[name] += 1
+            candidate = f"{name}#{seen[name]}"
+            if candidate not in seen:
+                seen[candidate] = 1
+                return candidate
 
     multi = len(paths) > 1
     for root in paths:
@@ -57,8 +68,14 @@ def iter_files(paths, max_file_bytes: int):
                 path = os.path.join(dirpath, fn)
                 try:
                     if os.path.islink(path) or os.path.getsize(path) > max_file_bytes:
+                        if skipped is not None:
+                            skipped["files"] += 1
+                            if not os.path.islink(path):
+                                skipped["bytes"] += os.path.getsize(path)
                         continue
                 except OSError:
+                    if skipped is not None:
+                        skipped["files"] += 1
                     continue
                 rel = os.path.relpath(path, root)
                 yield unique(os.path.join(label, rel) if multi else rel), path
@@ -138,14 +155,12 @@ def main(argv=None) -> int:
     else:
         svc = DedupService(**kw)
 
+    skipped = {"files": 0, "bytes": 0}
     if args.synthetic:
         objects = synthetic_versions(args.synthetic, args.synthetic_mb,
                                      args.edit_rate, args.seed)
     else:
-        objects = (
-            (name, path)
-            for name, path in iter_files(args.paths, args.max_file_mb << 20)
-        )
+        objects = iter_files(args.paths, args.max_file_mb << 20, skipped)
 
     ingested = 0
     queued = 0
@@ -178,9 +193,15 @@ def main(argv=None) -> int:
         }
         if not args.no_fp:
             out["fp_estimated_savings"] = st.fp_estimated_savings
+        out["skipped_files"] = skipped["files"]
+        out["skipped_bytes"] = skipped["bytes"]
         print(json.dumps(out, indent=2))
     else:
         print_report(st, ingested, with_fp=not args.no_fp)
+        if skipped["files"]:
+            print(f"\nskipped          {skipped['files']} files "
+                  f"({human(skipped['bytes'])}) — symlinks, > --max-file-mb, "
+                  f"or unreadable; the estimate excludes them")
     return 0
 
 

@@ -1,0 +1,71 @@
+"""Umbrella dev check: tier-1 tests + service + sharded smoke, one command.
+
+    python scripts/dev_check.py            # everything (tier-1 is slow)
+    python scripts/dev_check.py --fast     # smoke checks only (seconds)
+
+Runs, in order, reporting a pass/fail summary and exiting non-zero if any
+stage failed:
+
+  1. tier-1 pytest suite      (the ROADMAP verify command; skipped by --fast)
+  2. core dev check           (scripts/dev_check_core.py)
+  3. service dev check        (scripts/dev_check_service.py)
+  4. sharded service check    (scripts/dev_check_sharded.py)
+
+This is what CI runs (.github/workflows/ci.yml); locally, ``--fast`` is the
+pre-commit loop and the full form is the pre-PR gate.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import subprocess
+import sys
+import time
+
+ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+
+
+def _env():
+    env = dict(os.environ)
+    src = os.path.join(ROOT, "src")
+    env["PYTHONPATH"] = src + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else ""
+    )
+    return env
+
+
+def _stage(name: str, cmd: list[str]) -> tuple[str, bool, float]:
+    print(f"== {name}: {' '.join(cmd)}", flush=True)
+    t0 = time.time()
+    rc = subprocess.run(cmd, cwd=ROOT, env=_env()).returncode
+    dt = time.time() - t0
+    print(f"== {name}: {'OK' if rc == 0 else f'FAIL (rc={rc})'} in {dt:.1f}s",
+          flush=True)
+    return name, rc == 0, dt
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--fast", action="store_true",
+                    help="skip the tier-1 pytest suite (smoke checks only)")
+    args = ap.parse_args(argv)
+
+    py = sys.executable
+    stages = []
+    if not args.fast:
+        stages.append(("tier-1 tests", [py, "-m", "pytest", "-x", "-q"]))
+    stages += [
+        ("core check", [py, os.path.join("scripts", "dev_check_core.py")]),
+        ("service check", [py, os.path.join("scripts", "dev_check_service.py")]),
+        ("sharded check", [py, os.path.join("scripts", "dev_check_sharded.py")]),
+    ]
+
+    results = [_stage(name, cmd) for name, cmd in stages]
+    print("\n== summary")
+    for name, ok, dt in results:
+        print(f"  {'PASS' if ok else 'FAIL'}  {name}  ({dt:.1f}s)")
+    return 0 if all(ok for _, ok, _ in results) else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

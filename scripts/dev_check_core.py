@@ -1,9 +1,10 @@
 """Dev sanity: all SeqCDC implementations agree with the slow oracle."""
+import os
 import sys
 
 import numpy as np
 
-sys.path.insert(0, "/root/repo/src")
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import jax.numpy as jnp
 

@@ -4,11 +4,12 @@ Fast smoke check (seconds, small params) for the service subsystem:
 scheduler exactness vs the per-stream chunker, SHA-verified restore,
 delete/GC accounting back to zero.  Exits non-zero on any failure.
 """
+import os
 import sys
 
 import numpy as np
 
-sys.path.insert(0, "/root/repo/src")
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import jax.numpy as jnp
 

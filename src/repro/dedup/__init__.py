@@ -1,4 +1,5 @@
 """repro.dedup — fingerprints, dedup index, distributed index, block store."""
+from .dist_index import owner_of, route_host  # noqa: F401
 from .fingerprint import chunk_fingerprints, fingerprints_numpy  # noqa: F401
 from .index import FingerprintIndex, dedup_stats, space_savings  # noqa: F401
 from .store import BlockStore, DirBlockStore, sha256_key  # noqa: F401

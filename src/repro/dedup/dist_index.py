@@ -16,7 +16,13 @@ with jax-native collectives:
 
 The routed tensor is (num_shards, capacity, 3): capacity-padding in place of
 ragged all_to_all; overflow beyond capacity is *counted and reported*, never
-silently dropped (overflow_total in the result).
+silently dropped (overflow_total in the result).  Capacity/overflow semantics
+and how a consumer (the sharded service) should react are documented in
+docs/SHARDING.md.
+
+:func:`owner_of` is the one normative partition rule; the host-side
+:func:`route_host` and the in-JAX all_to_all path both derive from it, so a
+chunk record always lands on the same owner whichever transport moved it.
 """
 from __future__ import annotations
 
@@ -24,14 +30,50 @@ import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, PartitionSpec as PS
+
+
+def owner_of(fp1, num_shards: int):
+    """Shard owner of a fingerprint: ``fp.h1 mod num_shards``.
+
+    The consistent-hash partition rule (HYDRAstor-style).  Works on python
+    ints, numpy arrays, and jax arrays; every routing path in the repo —
+    the shard_map ``all_to_all`` here and the sharded service's host/threaded
+    fallback — must use this function so equal fingerprints always meet on
+    the same owner (which is what makes owner-local dedup globally correct).
+    """
+    return fp1 % num_shards
+
+
+def route_host(fps: np.ndarray, num_shards: int) -> np.ndarray:
+    """Host fallback for the all_to_all path: per-record owner shard ids.
+
+    ``fps``: (C, 2) uint32 fingerprint table (only ``h1`` routes).  Returns
+    (C,) int32 owner ids in [0, num_shards).  No capacity limit — the host
+    path is ragged-friendly, so it never overflows; it is the documented
+    fallback when the mesh path reports ``overflow_total > 0``.
+    """
+    fps = np.asarray(fps)
+    return owner_of(fps[:, 0].astype(np.int64), num_shards).astype(np.int32)
+
+
+def suggested_capacity(rows_per_shard: int, num_shards: int,
+                       capacity_factor: float = 1.5) -> int:
+    """Per-destination bucket rows for the capacity-padded ``all_to_all``.
+
+    Uniform routing sends ``rows_per_shard / num_shards`` rows to each owner;
+    ``capacity_factor`` is the headroom multiplier over that expectation
+    (+8 floor for tiny shards).  See docs/SHARDING.md for how to size it.
+    """
+    return int((rows_per_shard / num_shards) * capacity_factor) + 8
 
 
 def _local_route(fp, lengths, num_shards: int, capacity: int):
     """Build the (num_shards, capacity, 3) routed buffer for one shard."""
     c = fp.shape[0]
-    owner = (fp[:, 0] % num_shards).astype(jnp.int32)
+    owner = owner_of(fp[:, 0], num_shards).astype(jnp.int32)
     valid = lengths > 0
     owner = jnp.where(valid, owner, num_shards)  # padding -> dropped
     # position within destination bucket: rank among same-owner entries
@@ -77,6 +119,47 @@ def _owner_dedup(routed):
     )
 
 
+def routed_fp_tables(mesh: Mesh, axis: str = "data", *, capacity_factor=1.5):
+    """The transport half of :func:`distributed_dedup`, exposed on its own.
+
+    Returns a jitted fn: (fp (S*C, 2), lengths (S*C,)) sharded over ``axis``
+    -> ``(tables, overflow_total)`` where ``tables`` is
+    ``(S, S, capacity, 3)`` uint32: ``tables[owner, src]`` holds the records
+    shard ``src`` routed to ``owner`` (``[:, :, :, 2] == 0`` marks padding).
+    This is what an owner node consumes — the sharded service feeds each
+    owner's slab to that shard's fingerprint index.
+
+    ``overflow_total`` counts records dropped from the padded buckets; a
+    consumer must treat any nonzero overflow as "this batch did not all
+    arrive" and re-route via :func:`route_host` (see docs/SHARDING.md).
+    """
+    ns = mesh.shape[axis]
+
+    def fn(fp, lengths):
+        c = fp.shape[0]  # per-shard rows (shard_map body sees local shapes)
+        capacity = suggested_capacity(c, ns, capacity_factor)
+        buf, overflow = _local_route(fp, lengths, ns, capacity)
+        routed = jax.lax.all_to_all(
+            buf, axis, split_axis=0, concat_axis=0, tiled=True
+        )
+        return routed.reshape(ns, capacity, 3), jax.lax.psum(overflow, axis)
+
+    mapped = shard_map(
+        fn,
+        mesh=mesh,
+        in_specs=(PS(axis), PS(axis)),
+        out_specs=(PS(axis), PS()),
+        check_rep=False,
+    )
+
+    def call(fp, lengths):
+        tables, overflow = mapped(fp, lengths)
+        # stacked per-owner slabs: (S * S, capacity, 3) -> (S, S, capacity, 3)
+        return tables.reshape(ns, ns, tables.shape[-2], 3), overflow
+
+    return jax.jit(call)
+
+
 def distributed_dedup(mesh: Mesh, axis: str = "data", *, capacity_factor=1.5):
     """Returns a jitted fn: (fp (S*C, 2), lengths (S*C,)) sharded over ``axis``
     -> replicated global stats dict.  S = mesh axis size."""
@@ -84,7 +167,7 @@ def distributed_dedup(mesh: Mesh, axis: str = "data", *, capacity_factor=1.5):
 
     def fn(fp, lengths):
         c = fp.shape[0]  # per-shard rows (shard_map body sees local shapes)
-        capacity = int((c / ns) * capacity_factor) + 8
+        capacity = suggested_capacity(c, ns, capacity_factor)
 
         buf, overflow = _local_route(fp, lengths, ns, capacity)
         routed = jax.lax.all_to_all(

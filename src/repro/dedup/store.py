@@ -25,8 +25,10 @@ class BlockStore:
     def __init__(self):
         self.blocks: dict[str, bytes] = {}
         self.refs: dict[str, int] = {}
-        self.logical_bytes = 0  # bytes written by clients
-        self.stored_bytes = 0  # unique bytes actually stored
+        # both are *live* totals: puts grow them, releases/drops shrink them
+        # (freeing everything returns both to zero — see release())
+        self.logical_bytes = 0  # live bytes referenced by clients
+        self.stored_bytes = 0  # unique bytes currently stored
 
     def put(self, chunk: bytes) -> str:
         key = sha256_key(chunk)
@@ -129,6 +131,13 @@ class BlockStore:
         self.logical_bytes -= refs * size
         return size
 
+    def sync(self):
+        """Make accounting durable (no-op for the in-memory backend).
+
+        Uniform entry point so multi-store owners (the sharded service's
+        per-shard flush) need not type-switch on the backend.
+        """
+
     @property
     def savings(self) -> float:
         if not self.logical_bytes:
@@ -141,17 +150,24 @@ class DirBlockStore(BlockStore):
 
     Writes are atomic (tmp + rename) so a crashed writer never corrupts the
     store — required by the fault-tolerant checkpoint manager built on top.
+
+    The manifest also records block *sizes*: a crash between a block unlink
+    and the manifest sync leaves manifest entries whose files are gone, and
+    recovery (``release`` replay, ``gc``) must be able to correct the byte
+    accounting for a block it can no longer stat.
     """
 
     def __init__(self, root: str):
         super().__init__()
         self.root = root
+        self.sizes: dict[str, int] = {}
         os.makedirs(os.path.join(root, "blocks"), exist_ok=True)
         self._manifest_path = os.path.join(root, "manifest.json")
         if os.path.exists(self._manifest_path):
             with open(self._manifest_path) as f:
                 m = json.load(f)
             self.refs = {k: int(v) for k, v in m["refs"].items()}
+            self.sizes = {k: int(v) for k, v in m.get("sizes", {}).items()}
             self.logical_bytes = m["logical_bytes"]
             self.stored_bytes = m["stored_bytes"]
 
@@ -162,14 +178,20 @@ class DirBlockStore(BlockStore):
         key = sha256_key(chunk)
         self.logical_bytes += len(chunk)
         path = self._path(key)
-        if key not in self.refs:
+        # write keyed on *file presence*, not on the refcount: a stale
+        # manifest (crash between unlink and manifest sync) may list a key
+        # whose file is gone, and a committed recipe must never name bytes
+        # that are not on disk
+        if not os.path.exists(path):
             tmp = path + ".tmp"
             with open(tmp, "wb") as f:
                 f.write(chunk)
             os.replace(tmp, path)
+        if key not in self.refs:
             self.stored_bytes += len(chunk)
             self.refs[key] = 0
         self.refs[key] += 1
+        self.sizes[key] = len(chunk)
         return key
 
     def get(self, key: str) -> bytes:
@@ -180,10 +202,18 @@ class DirBlockStore(BlockStore):
         return b"".join(self.get(k) for k in keys)
 
     def chunk_size(self, key: str) -> int:
+        # manifest size first: must work for manifest-listed keys whose
+        # block file a crashed delete already unlinked
+        if key in self.sizes:
+            return self.sizes[key]
         return os.path.getsize(self._path(key))
 
     def _remove_block(self, key: str):
-        os.remove(self._path(key))
+        self.sizes.pop(key, None)
+        try:
+            os.remove(self._path(key))
+        except FileNotFoundError:
+            pass  # replay of a partially-applied delete: already unlinked
 
     def scan_keys(self) -> list[str]:
         """Manifest keys plus any block files on disk the manifest missed.
@@ -200,6 +230,10 @@ class DirBlockStore(BlockStore):
                 keys.add(fn)
         return sorted(keys)
 
+    def repair_ref(self, key: str, refs: int):
+        self.sizes.setdefault(key, self.chunk_size(key))
+        super().repair_ref(key, refs)
+
     def drop(self, key: str) -> int:
         if key in self.refs:
             return super().drop(key)
@@ -210,12 +244,17 @@ class DirBlockStore(BlockStore):
         os.remove(path)
         return size
 
+    def sync(self):
+        self.sync_manifest()
+
     def sync_manifest(self):
         tmp = self._manifest_path + ".tmp"
         with open(tmp, "w") as f:
             json.dump(
                 {
                     "refs": self.refs,
+                    "sizes": {k: self.sizes[k] for k in self.refs
+                              if k in self.sizes},
                     "logical_bytes": self.logical_bytes,
                     "stored_bytes": self.stored_bytes,
                 },

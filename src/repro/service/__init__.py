@@ -2,7 +2,10 @@
 
 Layers: ChunkScheduler (batched device chunking) -> BlockStore (content
 addressed, refcounted) -> RecipeTable (object manifests, GC roots), fronted
-by DedupService (put/get/stat/delete + mark-and-sweep gc).
+by DedupService (put/get/stat/delete + mark-and-sweep gc) and its
+fingerprint-partitioned multi-shard form ShardedDedupService
+(docs/SHARDING.md): owner-local stores/refcounts/GC behind per-shard async
+write queues, routed by dedup/dist_index's consistent-hash rule.
 """
 from .api import (  # noqa: F401
     DedupService,
@@ -12,4 +15,11 @@ from .api import (  # noqa: F401
     ServiceStats,
 )
 from .objects import ObjectRecipe, RecipeTable  # noqa: F401
-from .scheduler import ChunkResult, ChunkScheduler, SchedulerStats  # noqa: F401
+from .scheduler import (  # noqa: F401
+    ChunkResult,
+    ChunkScheduler,
+    MaskDivergenceError,
+    SchedulerStats,
+)
+from .sharded import ShardedDedupService  # noqa: F401
+from .writer import AsyncWriteError, ShardWriter, WriterPool  # noqa: F401

@@ -27,8 +27,6 @@ import os
 from collections import Counter
 from typing import Dict, List, Optional
 
-import numpy as np
-
 from repro.core.params import SeqCDCParams, derived_params
 from repro.dedup import BlockStore, DirBlockStore, FingerprintIndex
 
@@ -38,6 +36,51 @@ from .scheduler import ChunkResult, ChunkScheduler
 
 class IntegrityError(RuntimeError):
     """Restore produced bytes whose digest does not match the recipe."""
+
+
+def verify_restore(r: ObjectRecipe, data: bytes) -> bytes:
+    """The one restore-verification rule, shared by both services: length
+    and whole-object SHA-256 must match the recipe or nothing is returned."""
+    if len(data) != r.size or hashlib.sha256(data).hexdigest() != r.sha256:
+        raise IntegrityError(
+            f"object {r.name!r}: restored {len(data)}B, digest mismatch "
+            f"(expected {r.size}B sha256={r.sha256[:12]}...)"
+        )
+    return data
+
+
+def sweep_store(store: BlockStore, live: Dict[str, int]) -> "GCStats":
+    """One store's mark-and-sweep pass, shared by both services.
+
+    ``live`` is the recomputed truth (key -> reference count from the recipe
+    roots).  Sweeps :meth:`~repro.dedup.BlockStore.scan_keys` — which for
+    file-backed stores includes block files the refcount manifest never
+    recorded — dropping unreferenced blocks and repairing refcount drift.
+    """
+    freed_blocks = freed_bytes = repaired = 0
+    for key in store.scan_keys():
+        want = live.get(key, 0)
+        if want == 0:
+            freed_bytes += store.drop(key)
+            freed_blocks += 1
+        elif store.refs.get(key) != want:
+            store.repair_ref(key, want)
+            repaired += 1
+    return GCStats(freed_blocks, freed_bytes, repaired)
+
+
+def recipe_totals(recipes: RecipeTable) -> tuple[int, int, Dict[int, int]]:
+    """(logical_bytes, total_chunks, log2-bucket histogram) over a table —
+    the recipe-derived half of ServiceStats, shared by both services."""
+    hist: Counter = Counter()
+    logical = 0
+    total_chunks = 0
+    for r in recipes:
+        logical += r.size
+        total_chunks += len(r.keys)
+        for ln in r.chunk_lens:
+            hist[max(0, int(ln).bit_length() - 1)] += 1
+    return logical, total_chunks, dict(sorted(hist.items()))
 
 
 @dataclasses.dataclass
@@ -84,7 +127,63 @@ class GCStats:
     repaired_refs: int
 
 
-class DedupService:
+class ServiceBase:
+    """The scheduler-facing ingest/serve surface shared by both services.
+
+    Subclasses (:class:`DedupService`, single store;
+    :class:`~repro.service.sharded.ShardedDedupService`, fingerprint
+    partitioned) provide ``recipes``, ``scheduler``, an ``_in_flight`` name
+    set, and their own ``flush``/``get``/``delete``/``gc``; everything here
+    is backend-agnostic, so the two services cannot drift on the ingest
+    contract (name collisions, in-flight bookkeeping, stat/names shape).
+    """
+
+    recipes: RecipeTable
+    scheduler: "ChunkScheduler"
+    _in_flight: set
+
+    def submit(self, name: str, data, *, overwrite: bool = False) -> int:
+        """Queue one object for ingest; returns its ticket (a sequence id).
+
+        Nothing is chunked, stored, or committed until :meth:`flush` — the
+        object is not restorable and not visible in :meth:`names` yet.
+        ``data`` is raw bytes or anything numpy turns into a uint8 vector;
+        raises ``KeyError`` if ``name`` already exists (committed or
+        in-flight) and ``overwrite`` is False.  Submitting many objects
+        before one flush is what fills device batches (continuous batching).
+        """
+        if not overwrite and (name in self.recipes or name in self._in_flight):
+            raise KeyError(f"object {name!r} already exists (overwrite=False)")
+        seq = self.scheduler.submit(data, tag=name)
+        self._in_flight.add(name)
+        return seq
+
+    def put(self, name: str, data, *, overwrite: bool = False) -> ObjectStat:
+        """Store one object now (submit + flush); returns its ObjectStat.
+
+        Convenience for interactive/one-shot use — batched ingest via
+        :meth:`submit` + :meth:`flush` is the throughput path.  After
+        ``put`` returns, the object is durable (for file-backed stores)
+        and restorable via ``get``.
+        """
+        self.submit(name, data, overwrite=overwrite)
+        return self.flush()[-1]
+
+    def flush(self) -> List[ObjectStat]:
+        raise NotImplementedError
+
+    def stat(self, name: str) -> ObjectStat:
+        """Recipe-level summary of one committed object (size, chunk count,
+        digest, mean chunk) without touching block data.  ``KeyError`` for
+        unknown or not-yet-flushed names."""
+        return ObjectStat.of(self.recipes.get(name))
+
+    def names(self) -> List[str]:
+        """Sorted names of all committed objects (in-flight ones excluded)."""
+        return self.recipes.names()
+
+
+class DedupService(ServiceBase):
     """Streaming dedup: batched chunking in front of a GC-capable chunk store."""
 
     def __init__(
@@ -112,7 +211,7 @@ class DedupService:
         # semantics); deletes/overwrites do not shrink it, unlike the exact
         # store accounting
         self.fp_index = FingerprintIndex()
-        self._in_flight: Dict[int, str] = {}  # seq -> name
+        self._in_flight: set[str] = set()  # names submitted, not yet flushed
 
     @classmethod
     def open(cls, root: str, **kwargs) -> "DedupService":
@@ -123,15 +222,6 @@ class DedupService:
         return cls(store=store, recipes=recipes, **kwargs)
 
     # -- ingest -----------------------------------------------------------------
-    def submit(self, name: str, data, *, overwrite: bool = False) -> int:
-        """Queue one object; returns its ticket.  Commit happens at flush."""
-        if not overwrite and (name in self.recipes or
-                              name in self._in_flight.values()):
-            raise KeyError(f"object {name!r} already exists (overwrite=False)")
-        seq = self.scheduler.submit(np.asarray(data), tag=name)
-        self._in_flight[seq] = name
-        return seq
-
     def flush(self) -> List[ObjectStat]:
         """Drain the scheduler, store chunks, commit recipes.  FIFO order.
 
@@ -140,23 +230,25 @@ class DedupService:
         leaves orphan blocks (reclaimable by :meth:`gc`), never a committed
         recipe pointing at missing blocks.
         """
+        # whatever drain() does — return results, or lose requests to a
+        # device-side error — the submitted names are no longer pending, so
+        # they must stop blocking resubmission
+        try:
+            results = self.scheduler.drain()
+        finally:
+            self._in_flight.clear()
         out = []
         stale: List[str] = []
-        for res in self.scheduler.drain():
+        for res in results:
             stat, old_keys = self._commit(res)
             out.append(stat)
             stale.extend(old_keys)
-        self._in_flight.clear()
         self.sync()
         if stale:
             for k in stale:
                 self.store.release(k)
             self.sync()
         return out
-
-    def put(self, name: str, data, *, overwrite: bool = False) -> ObjectStat:
-        self.submit(name, data, overwrite=overwrite)
-        return self.flush()[-1]
 
     def _commit(self, res: ChunkResult) -> tuple[ObjectStat, List[str]]:
         """Store one result; returns (stat, keys superseded by an overwrite).
@@ -181,21 +273,15 @@ class DedupService:
 
     # -- serve ------------------------------------------------------------------
     def get(self, name: str) -> bytes:
-        """Reassemble an object from its chunks; SHA-256-verified."""
+        """Reassemble an object from its chunks, end-to-end verified.
+
+        Both the restored length and the whole-object SHA-256 must match
+        the recipe; any mismatch (corrupt block, recipe naming the right
+        chunks in the wrong order) raises :class:`IntegrityError` rather
+        than returning wrong bytes.  ``KeyError`` for unknown names.
+        """
         r = self.recipes.get(name)
-        data = self.store.get_stream(r.keys)
-        if len(data) != r.size or hashlib.sha256(data).hexdigest() != r.sha256:
-            raise IntegrityError(
-                f"object {name!r}: restored {len(data)}B, digest mismatch "
-                f"(expected {r.size}B sha256={r.sha256[:12]}...)"
-            )
-        return data
-
-    def stat(self, name: str) -> ObjectStat:
-        return ObjectStat.of(self.recipes.get(name))
-
-    def names(self) -> List[str]:
-        return self.recipes.names()
+        return verify_restore(r, self.store.get_stream(r.keys))
 
     # -- delete / GC ------------------------------------------------------------
     def delete(self, name: str) -> int:
@@ -227,34 +313,18 @@ class DedupService:
         live: Counter = Counter()
         for r in self.recipes:
             live.update(r.keys)
-        freed_blocks = freed_bytes = repaired = 0
-        for key in self.store.scan_keys():
-            want = live.get(key, 0)
-            if want == 0:
-                freed_bytes += self.store.drop(key)
-                freed_blocks += 1
-            elif self.store.refs.get(key) != want:
-                self.store.repair_ref(key, want)
-                repaired += 1
+        stats = sweep_store(self.store, live)
         self.sync()
-        return GCStats(freed_blocks, freed_bytes, repaired)
+        return stats
 
     def sync(self):
         """Persist recipes + store manifest (no-op for in-memory backends)."""
         self.recipes.sync()
-        if isinstance(self.store, DirBlockStore):
-            self.store.sync_manifest()
+        self.store.sync()
 
     # -- accounting -------------------------------------------------------------
     def stats(self) -> ServiceStats:
-        hist: Counter = Counter()
-        logical = 0
-        total_chunks = 0
-        for r in self.recipes:
-            logical += r.size
-            total_chunks += len(r.keys)
-            for ln in r.chunk_lens:
-                hist[max(0, int(ln).bit_length() - 1)] += 1
+        logical, total_chunks, hist = recipe_totals(self.recipes)
         sched = self.scheduler.stats
         return ServiceStats(
             objects=len(self.recipes),
@@ -262,7 +332,7 @@ class DedupService:
             stored_bytes=self.store.stored_bytes,
             total_chunks=total_chunks,
             unique_chunks=len(self.store.refs),
-            chunk_size_hist=dict(sorted(hist.items())),
+            chunk_size_hist=hist,
             fp_estimated_savings=self.fp_index.savings,
             batches=sched.dispatches,
             batch_occupancy=sched.occupancy,

@@ -17,7 +17,7 @@ from __future__ import annotations
 import dataclasses
 import json
 import os
-from typing import Dict, Iterator, List
+from typing import Dict, Iterator, List, Optional
 
 
 @dataclasses.dataclass
@@ -27,14 +27,23 @@ class ObjectRecipe:
     sha256: str  # digest of the reassembled object
     keys: List[str]  # chunk keys, in stream order
     chunk_lens: List[int]
+    #: owner shard per chunk (sharded service only; None = single-store).
+    #: Routing is by accelerator fingerprint, which a restore cannot recompute
+    #: from the SHA key alone, so the owner must be recorded at commit time.
+    shards: Optional[List[int]] = None
 
     def to_json(self) -> dict:
-        return dataclasses.asdict(self)
+        d = dataclasses.asdict(self)
+        if self.shards is None:  # keep single-store tables byte-stable
+            d.pop("shards")
+        return d
 
     @classmethod
     def from_json(cls, d: dict) -> "ObjectRecipe":
+        shards = d.get("shards")
         return cls(name=d["name"], size=int(d["size"]), sha256=d["sha256"],
-                   keys=list(d["keys"]), chunk_lens=[int(x) for x in d["chunk_lens"]])
+                   keys=list(d["keys"]), chunk_lens=[int(x) for x in d["chunk_lens"]],
+                   shards=[int(s) for s in shards] if shards is not None else None)
 
 
 class RecipeTable:

@@ -5,10 +5,12 @@ objects, but the TPU pipeline (``boundaries_batch`` — the vmapped two-phase
 SeqCDC — plus vmapped ``chunk_fingerprints``) wants fixed ``(B, S)`` device
 batches so one compiled XLA program stays hot.  This module bridges the two
 with the same slot discipline as ``serve/engine.py``: requests queue per
-*length bucket* (power-of-two padded length), a bucket dispatches the moment
-its ``slots`` rows fill, and ``drain`` flushes partial buckets padded with
-zero rows.  Distinct device shapes stay logarithmic in the stream-length
-range, so the jit cache is tiny and every dispatch after warmup is a replay.
+*length bucket* (padded length from the half-octave grid {1, 1.5}x2^k —
+two buckets per octave, capping row padding at 50%), a bucket dispatches
+the moment its ``slots`` rows fill, and ``drain`` flushes partial buckets
+padded with zero rows.  Distinct device shapes stay logarithmic (2 per
+octave) in the stream-length range, so the jit cache is tiny and every
+dispatch after warmup is a replay.
 
 Exactness under padding (the part that is not just batching): chunking a
 stream padded to bucket size S is *not* the same as chunking the stream —
@@ -57,6 +59,10 @@ def _device_chunk(x, *, p, mc, mask_impl, step_impl, with_fp):
         lambda d, b, c: chunk_fingerprints(d, b, c, max_chunks=mc)
     )(x, bounds, counts)
     return bounds, counts, fps, lens
+
+
+class MaskDivergenceError(AssertionError):
+    """The Pallas and lax mask kernels disagreed on a dispatched batch."""
 
 
 @dataclasses.dataclass
@@ -108,6 +114,7 @@ class ChunkScheduler:
         mask_impl: MaskImpl = "jnp",
         step_impl: StepImpl = "wide",
         with_fingerprints: bool = True,
+        cross_check_masks: bool = False,
     ):
         from repro.core.params import derived_params
 
@@ -123,6 +130,14 @@ class ChunkScheduler:
         self.mask_impl = mask_impl
         self.step_impl = step_impl
         self.with_fingerprints = with_fingerprints
+        # bit-identity guard for the Pallas hot path: the first dispatch of
+        # every device shape is replayed through the other mask backend and
+        # compared — a cheap one-time check per compiled program that turns a
+        # kernel regression into a loud MaskDivergenceError instead of silent
+        # chunk-boundary drift (which dedup would quietly absorb as a worse
+        # ratio, the nastiest possible failure mode).
+        self.cross_check_masks = cross_check_masks
+        self._checked_buckets: set[int] = set()
         self.stats = SchedulerStats()
         self._pending: Dict[int, List[ChunkRequest]] = {}
         self._ready: List[tuple[int, ChunkResult]] = []
@@ -131,8 +146,15 @@ class ChunkScheduler:
 
     # -- public -----------------------------------------------------------------
     def submit(self, data, tag: Any = None) -> int:
-        """Queue one stream for chunking; dispatches when its bucket fills."""
-        arr = np.ascontiguousarray(data, dtype=np.uint8).reshape(-1)
+        """Queue one stream for chunking; dispatches when its bucket fills.
+
+        ``data``: raw bytes-like (bytes/bytearray/memoryview) or anything
+        ``np.ascontiguousarray`` turns into a uint8 vector.
+        """
+        if isinstance(data, (bytes, bytearray, memoryview)):
+            arr = np.frombuffer(data, dtype=np.uint8)
+        else:
+            arr = np.ascontiguousarray(data, dtype=np.uint8).reshape(-1)
         seq = self._next_seq
         self._next_seq += 1
         self.stats.stream_bytes += arr.size
@@ -201,6 +223,9 @@ class ChunkScheduler:
         bounds, counts, fps, lens = self._device_fn(bucket)(jnp.asarray(batch))
         bounds = np.asarray(bounds)
         counts = np.asarray(counts)
+        if self.cross_check_masks and bucket not in self._checked_buckets:
+            self._checked_buckets.add(bucket)
+            self._cross_check(bucket, batch, bounds, counts)
         if fps is not None:
             fps, lens = np.asarray(fps), np.asarray(lens)
         self.stats.dispatches += 1
@@ -211,6 +236,28 @@ class ChunkScheduler:
                 r, bounds[row, : counts[row]],
                 fps[row] if fps is not None else None,
             )))
+
+    def _cross_check(self, bucket: int, batch: np.ndarray,
+                     bounds: np.ndarray, counts: np.ndarray):
+        """Replay one batch through the other mask backend; raise on any bit."""
+        from repro.core.seqcdc import boundaries_batch
+
+        other = "jnp" if self.mask_impl == "pallas" else "pallas"
+        b2, c2 = boundaries_batch(
+            jnp.asarray(batch), self.params, mask_impl=other,
+            step_impl=self.step_impl,
+            max_chunks=max_chunks_for(bucket, self.params),
+        )
+        b2, c2 = np.asarray(b2), np.asarray(c2)
+        if not (np.array_equal(counts, c2) and np.array_equal(bounds, b2)):
+            rows = np.nonzero(
+                (counts != c2) | (bounds != b2).any(axis=-1)
+            )[0].tolist()
+            raise MaskDivergenceError(
+                f"mask_impl={self.mask_impl!r} and {other!r} diverged on "
+                f"bucket {bucket} (rows {rows}): the Pallas phase-1 kernel "
+                f"no longer matches the lax reference bit-for-bit"
+            )
 
     def _exactify(self, req: ChunkRequest, padded: np.ndarray,
                   padded_fps: np.ndarray | None) -> ChunkResult:

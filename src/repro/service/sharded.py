@@ -1,0 +1,438 @@
+"""ShardedDedupService: fingerprint-partitioned multi-shard dedup.
+
+Scales the stage *after* chunking.  The single-store :class:`DedupService`
+serializes fingerprint comparison and block IO behind one refcount table;
+this service partitions the fingerprint space across ``num_shards`` owner
+shards — the HYDRAstor-style design ``dedup/dist_index.py`` expresses with
+jax collectives — so index lookups, refcounting, GC, and block IO all
+become owner-local and embarrassingly parallel:
+
+    submit/put ──► ChunkScheduler (shared; batched SeqCDC + fingerprints)
+               ──► owner_of(fp.h1, N)  — dist_index's consistent-hash rule
+               ──► ShardWriter[owner]  — async bounded queue, one per shard
+               ──► BlockStore[owner]   — owner-local refcounts + accounting
+    flush      ──► writer barrier ──► recipes commit ──► manifests sync
+    get        ──► gather chunks across shards ──► SHA-256 verify
+
+**Routing.**  ``owner_of`` (fp.h1 mod N) is the single partition rule; equal
+chunks have equal fingerprints, land on the same owner, and dedup there —
+owner-local dedup is therefore globally exact, and an N-shard service stores
+byte-for-byte the same unique chunks as the 1-shard service.  When a jax
+``Mesh`` with N devices is supplied, per-flush fingerprint records travel
+the real ``all_to_all`` path (:func:`~repro.dedup.dist_index.routed_fp_tables`)
+into per-owner tables; a batch that overflows the capacity-padded buckets is
+re-routed host-side (counted in ``overflow_rerouted``, never dropped — see
+docs/SHARDING.md).  Without a mesh, :func:`~repro.dedup.dist_index.route_host`
+is the host/threaded fallback.  Both derive from the same ``owner_of``.
+
+**Async flush.**  Store writes run on per-shard writer threads behind a
+bounded queue (``max_pending`` chunks of backpressure), so SHA-256 hashing
+and block-file IO overlap with device chunking instead of serializing after
+it.  Crash-safe ordering is preserved: the flush barrier guarantees every
+block durably landed *before* any recipe is committed or any manifest
+synced, so a crash at any point leaves orphan blocks (reclaimed by
+:meth:`gc`), never a manifest or recipe naming bytes that don't exist.
+
+**Restores.**  Recipes record each chunk's owner shard (routing is by
+accelerator fingerprint, which the SHA key alone cannot reproduce); ``get``
+gathers chunks across shards and verifies the whole-object SHA-256, exactly
+like the single-store service.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+from collections import Counter
+from typing import List, Optional, Sequence
+
+import numpy as np
+
+from repro.core.params import SeqCDCParams, derived_params
+from repro.dedup import BlockStore, DirBlockStore, FingerprintIndex
+from repro.dedup.dist_index import route_host, routed_fp_tables
+
+from .api import (
+    GCStats,
+    IntegrityError,
+    ObjectStat,
+    ServiceBase,
+    ServiceStats,
+    recipe_totals,
+    sweep_store,
+    verify_restore,
+)
+from .objects import ObjectRecipe, RecipeTable
+from .scheduler import ChunkResult, ChunkScheduler
+from .writer import WriterPool
+
+
+class ShardedDedupService(ServiceBase):
+    """Fingerprint-partitioned dedup across N owner-local shards."""
+
+    def __init__(
+        self,
+        num_shards: int = 4,
+        stores: Optional[Sequence[BlockStore]] = None,
+        params: Optional[SeqCDCParams] = None,
+        *,
+        avg_chunk: int = 8192,
+        slots: int = 8,
+        min_bucket: int = 1 << 14,
+        recipes: Optional[RecipeTable] = None,
+        mask_impl: str = "jnp",
+        step_impl: str = "wide",
+        cross_check_masks: bool = False,
+        async_flush: bool = True,
+        max_pending: int = 256,
+        mesh=None,
+        mesh_axis: str = "data",
+        capacity_factor: float = 1.5,
+    ):
+        if stores is not None and len(stores) != num_shards:
+            raise ValueError(f"{len(stores)} stores for {num_shards} shards")
+        self.num_shards = int(num_shards)
+        if self.num_shards < 1:
+            raise ValueError("num_shards must be >= 1")
+        self.params = params or derived_params(avg_chunk)
+        self.stores: List[BlockStore] = (
+            list(stores) if stores is not None
+            else [BlockStore() for _ in range(self.num_shards)]
+        )
+        self.recipes = recipes if recipes is not None else RecipeTable()
+        # fingerprints are mandatory: they are the routing key
+        self.scheduler = ChunkScheduler(
+            self.params, slots=slots, min_bucket=min_bucket,
+            mask_impl=mask_impl, step_impl=step_impl,
+            with_fingerprints=True, cross_check_masks=cross_check_masks,
+        )
+        # validate the mesh before anything spawns threads: a constructor
+        # that raises must not leak per-shard writer workers
+        self.mesh = mesh
+        self.mesh_axis = mesh_axis
+        if mesh is not None:
+            if mesh_axis not in mesh.shape:
+                raise ValueError(
+                    f"mesh has no axis {mesh_axis!r} (axes: "
+                    f"{list(mesh.shape)}); pass mesh_axis=<name>"
+                )
+            if mesh.shape[mesh_axis] != self.num_shards:
+                raise ValueError(
+                    f"mesh axis {mesh_axis!r} has {mesh.shape[mesh_axis]} "
+                    f"devices but the service has {self.num_shards} shards; "
+                    f"the all_to_all route needs one device per owner shard"
+                )
+        self._routed_fn = (
+            routed_fp_tables(mesh, mesh_axis, capacity_factor=capacity_factor)
+            if mesh is not None else None
+        )
+        self.async_flush = bool(async_flush)
+        self.writers = WriterPool(
+            self.num_shards, max_pending if self.async_flush else 0
+        )
+        # owner-local fingerprint indexes (the paper's estimator layer),
+        # partitioned by the same rule as the stores
+        self.fp_index: List[FingerprintIndex] = [
+            FingerprintIndex() for _ in range(self.num_shards)
+        ]
+        #: fp records that overflowed the mesh all_to_all capacity and were
+        #: re-routed host-side (docs/SHARDING.md: counted, never dropped)
+        self.overflow_rerouted = 0
+        self._in_flight: set[str] = set()  # names submitted, not yet flushed
+
+    @classmethod
+    def open(cls, root: str, num_shards: int = 4, **kwargs) -> "ShardedDedupService":
+        """File-backed sharded service: one block depot per shard under
+        ``root/shard-NN/`` plus a shared recipe table.  The shard count is
+        pinned in ``root/sharding.json`` — reopening with a different N would
+        scatter the partition map, so it is a hard error.
+        """
+        if num_shards < 1:  # validate before the depot meta is persisted:
+            # a bad first call must not poison root/sharding.json
+            raise ValueError("num_shards must be >= 1")
+        os.makedirs(root, exist_ok=True)
+        meta_path = os.path.join(root, "sharding.json")
+        if os.path.exists(meta_path):
+            with open(meta_path) as f:
+                want = int(json.load(f)["num_shards"])
+            if want != num_shards:
+                raise ValueError(
+                    f"depot {root!r} was created with num_shards={want}, "
+                    f"reopen requested {num_shards}"
+                )
+        else:
+            tmp = meta_path + ".tmp"
+            with open(tmp, "w") as f:
+                json.dump({"num_shards": int(num_shards)}, f)
+            os.replace(tmp, meta_path)
+        stores = [
+            DirBlockStore(os.path.join(root, f"shard-{s:02d}"))
+            for s in range(num_shards)
+        ]
+        recipes = RecipeTable(os.path.join(root, "recipes.json"))
+        return cls(num_shards, stores=stores, recipes=recipes, **kwargs)
+
+    # -- ingest -----------------------------------------------------------------
+    def flush(self) -> List[ObjectStat]:
+        """Drain the scheduler, write blocks to owner shards, commit recipes.
+
+        Durability protocol (the async generalization of the single-store
+        flush):
+
+        1. every chunk's ``put`` is enqueued on its owner shard's writer;
+        2. the writer barrier waits until all blocks durably landed — a
+           failed write raises here and *nothing* below runs;
+        3. recipes (with per-chunk owners) are committed and synced;
+        4. shard manifests are synced — only after their blocks landed;
+        5. blocks superseded by overwrites are released, manifests re-synced.
+
+        A crash after (1) leaves orphan blocks for :meth:`gc`; a crash
+        between (3) and (4) leaves stale manifests that :meth:`gc` repairs
+        against the recipe roots.  No ordering leaves a recipe or manifest
+        naming bytes that were never written.
+        """
+        # whatever drain() does — return results, or lose requests to a
+        # device-side error — the submitted names are no longer pending, so
+        # they must stop blocking resubmission
+        try:
+            results = self.scheduler.drain()
+        finally:
+            self._in_flight.clear()
+        staged = []  # (result, owners, keys)
+        for res in results:
+            owners = self._owners_for(res)
+            keys: List[Optional[str]] = [None] * len(owners)
+            s = 0
+            for i, e in enumerate(res.bounds.tolist()):
+                self._enqueue_put(owners[i], keys, i, res.data[s:e])
+                s = e
+            staged.append((res, owners, keys))
+        self.writers.barrier()  # blocks are durable past this point
+
+        out = []
+        stale: List[tuple[int, str]] = []
+        for res, owners, keys in staged:
+            name = str(res.tag)
+            old = self.recipes.get(name) if name in self.recipes else None
+            recipe = ObjectRecipe(
+                name=name,
+                size=res.size,
+                sha256=hashlib.sha256(res.data).hexdigest(),
+                keys=list(keys),  # type: ignore[arg-type]
+                chunk_lens=res.lengths.astype(int).tolist(),
+                shards=[int(o) for o in owners],
+            )
+            self.recipes.add(recipe)
+            out.append(ObjectStat.of(recipe))
+            if old is not None:
+                stale.extend(zip(self._recipe_shards(old), old.keys))
+        self._ingest_fps(results)
+        self.sync()
+        if stale:
+            for shard, key in stale:
+                self.writers.submit(shard, self._release_task(shard, key))
+            self.writers.barrier()
+            self.sync()
+        return out
+
+    def _enqueue_put(self, owner: int, keys: List[Optional[str]], i: int,
+                     chunk: np.ndarray):
+        store = self.stores[owner]
+
+        def task():
+            keys[i] = store.put(chunk.tobytes())
+
+        self.writers.submit(owner, task)
+
+    def _release_task(self, shard: int, key: str):
+        store = self.stores[shard]
+        return lambda: store.release(key)
+
+    def _owners_for(self, res: ChunkResult) -> np.ndarray:
+        """Owner shard per chunk of one result (dist_index's hash rule)."""
+        if self.num_shards == 1 or res.fps.size == 0:
+            return np.zeros(len(res.bounds), dtype=np.int32)
+        return route_host(res.fps, self.num_shards)
+
+    def _recipe_shards(self, r: ObjectRecipe) -> List[int]:
+        """Per-chunk owners of a recipe; tolerate single-store tables at N=1
+        (migration path: a DedupService depot opens as a 1-shard service)."""
+        if r.shards is not None:
+            return r.shards
+        if self.num_shards == 1:
+            return [0] * len(r.keys)
+        raise IntegrityError(
+            f"recipe {r.name!r} has no shard map but the service has "
+            f"{self.num_shards} shards"
+        )
+
+    # -- fingerprint-estimator ingestion ---------------------------------------
+    def _ingest_fps(self, results: List[ChunkResult]):
+        """Feed owner-local fp indexes, via the mesh all_to_all when present."""
+        live = [r for r in results if r.fps.size]
+        if not live:
+            return
+        fps = np.concatenate([r.fps for r in live])
+        lengths = np.concatenate([r.lengths for r in live]).astype(np.int32)
+        if self._routed_fn is not None and self._mesh_ingest(fps, lengths):
+            return
+        owners = route_host(fps, self.num_shards)
+        for s in range(self.num_shards):
+            m = owners == s
+            if m.any():
+                self.fp_index[s].add_batch(fps[m], lengths[m])
+
+    def _mesh_ingest(self, fps: np.ndarray, lengths: np.ndarray) -> bool:
+        """Route fp records through the all_to_all path into owner tables.
+
+        Returns False (caller falls back to :func:`route_host`) when the
+        capacity-padded buckets overflowed — the overflow is counted in
+        ``overflow_rerouted`` and the whole batch is re-routed host-side so
+        no record is lost (the contract in docs/SHARDING.md).
+        """
+        ns = self.mesh.shape[self.mesh_axis]
+        rows = len(lengths)
+        # pad to ns * next-power-of-two rows-per-shard: flush sizes vary per
+        # call, and padding only to a multiple of ns would retrace the jitted
+        # all_to_all for nearly every flush; the pow2 grid bounds the compile
+        # cache logarithmically (zero-length pad rows are dropped in-route)
+        per_shard = max(1, -(-rows // ns))
+        target = ns * (1 << (per_shard - 1).bit_length())
+        pad = target - rows
+        if pad:
+            fps = np.concatenate([fps, np.zeros((pad, 2), dtype=fps.dtype)])
+            lengths = np.concatenate([lengths, np.zeros(pad, dtype=lengths.dtype)])
+        with self.mesh:
+            tables, overflow = self._routed_fn(fps, lengths)
+        if int(overflow) > 0:
+            self.overflow_rerouted += int(overflow)
+            return False
+        tables = np.asarray(tables)  # (owner, src, capacity, 3)
+        for s in range(self.num_shards):
+            flat = tables[s].reshape(-1, 3)
+            valid = flat[:, 2] > 0
+            if valid.any():
+                self.fp_index[s].add_batch(
+                    flat[valid, :2].astype(np.uint32),
+                    flat[valid, 2].astype(np.int64),
+                )
+        return True
+
+    # -- serve ------------------------------------------------------------------
+    def get(self, name: str) -> bytes:
+        """Reassemble an object, gathering chunks across owner shards;
+        verifies length and whole-object SHA-256 (:class:`IntegrityError`)."""
+        r = self.recipes.get(name)
+        parts = [
+            self.stores[shard].get(key)
+            for shard, key in zip(self._recipe_shards(r), r.keys)
+        ]
+        return verify_restore(r, b"".join(parts))
+
+    # -- delete / GC ------------------------------------------------------------
+    def delete(self, name: str) -> int:
+        """Remove an object; returns stored bytes actually reclaimed.
+
+        Same ordering as the single-store service: recipe removal is made
+        durable first, then block releases run on the owner shards' writers
+        (keeping every store single-writer), so a crash mid-delete leaves
+        reclaimable orphans, never a recipe naming missing blocks.
+        """
+        r = self.recipes.remove(name)  # KeyError for unknown objects
+        self.recipes.sync()
+        freed = [0] * self.num_shards
+        for shard, key, ln in zip(self._recipe_shards(r), r.keys, r.chunk_lens):
+            self.writers.submit(shard, self._free_task(shard, key, ln, freed))
+        self.writers.barrier()
+        self.sync()
+        return sum(freed)
+
+    def _free_task(self, shard: int, key: str, ln: int, freed: List[int]):
+        store = self.stores[shard]
+
+        def task():
+            if store.release(key):
+                freed[shard] += ln
+
+        return task
+
+    def gc(self) -> GCStats:
+        """Owner-local mark-and-sweep on every shard, recipes as roots.
+
+        Each shard sweeps only the keys it owns (its store's
+        ``scan_keys``), on its own writer thread, in parallel; the recipe
+        scan partitions the roots by recorded owner.  Semantics per shard
+        are identical to the single-store :meth:`DedupService.gc`: crash
+        orphans reclaimed, refcount drift repaired.
+        """
+        live: List[Counter] = [Counter() for _ in range(self.num_shards)]
+        for r in self.recipes:
+            for shard, key in zip(self._recipe_shards(r), r.keys):
+                live[shard][key] += 1
+        totals = [GCStats(0, 0, 0) for _ in range(self.num_shards)]
+        for s in range(self.num_shards):
+            self.writers.submit(s, self._gc_task(s, live[s], totals))
+        self.writers.barrier()
+        self.sync()
+        return GCStats(
+            freed_blocks=sum(t.freed_blocks for t in totals),
+            freed_bytes=sum(t.freed_bytes for t in totals),
+            repaired_refs=sum(t.repaired_refs for t in totals),
+        )
+
+    def _gc_task(self, s: int, live: Counter, totals: List[GCStats]):
+        store = self.stores[s]
+
+        def task():
+            totals[s] = sweep_store(store, live)
+
+        return task
+
+    def sync(self):
+        """Persist recipes, then every shard manifest (in-memory: no-op)."""
+        self.recipes.sync()
+        for store in self.stores:
+            store.sync()
+
+    def close(self):
+        """Drain writers and stop their threads (propagates write errors)."""
+        self.writers.close()
+
+    def __enter__(self) -> "ShardedDedupService":
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+
+    # -- accounting -------------------------------------------------------------
+    def stats(self) -> ServiceStats:
+        """Aggregate accounting, same shape as the single-store service
+        (which makes N-vs-1 equivalence directly assertable)."""
+        logical, total_chunks, hist = recipe_totals(self.recipes)
+        fp_orig = sum(ix.original_bytes for ix in self.fp_index)
+        fp_dedup = sum(ix.dedup_bytes for ix in self.fp_index)
+        sched = self.scheduler.stats
+        return ServiceStats(
+            objects=len(self.recipes),
+            logical_bytes=logical,
+            stored_bytes=sum(st.stored_bytes for st in self.stores),
+            total_chunks=total_chunks,
+            unique_chunks=sum(len(st.refs) for st in self.stores),
+            chunk_size_hist=hist,
+            fp_estimated_savings=(fp_orig - fp_dedup) / fp_orig if fp_orig else 0.0,
+            batches=sched.dispatches,
+            batch_occupancy=sched.occupancy,
+        )
+
+    def shard_stats(self) -> List[dict]:
+        """Per-shard breakdown: balance of the fingerprint partition."""
+        return [
+            {
+                "shard": s,
+                "stored_bytes": st.stored_bytes,
+                "logical_bytes": st.logical_bytes,
+                "unique_chunks": len(st.refs),
+                "fp_entries": len(self.fp_index[s].seen),
+            }
+            for s, st in enumerate(self.stores)
+        ]

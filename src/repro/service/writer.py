@@ -1,0 +1,130 @@
+"""Async store writers: block flushing off the ingest thread.
+
+The single-store service does store puts inline with ingest, so SHA-256
+hashing and block-file IO serialize with chunking.  The sharded service
+instead hands each chunk to its owner shard's :class:`ShardWriter` — one
+worker thread per shard, consuming a bounded FIFO queue:
+
+* **one thread per shard** — a shard's ``BlockStore`` (refcount dicts,
+  accounting counters, block files) is only ever mutated by its own writer
+  thread, so no store needs locks; cross-shard writes proceed in parallel.
+* **bounded backpressure** — ``submit`` blocks once ``max_pending`` tasks
+  are queued, so a fast ingest thread cannot buffer an unbounded number of
+  chunk payloads in memory.
+* **crash-safe ordering** — the queue is FIFO and :meth:`barrier` returns
+  only after every submitted task ran, so the flush protocol "blocks land,
+  *then* recipes commit, *then* manifests sync" holds under async exactly
+  as it does inline (the commit/sync steps run on the ingest thread after
+  the barrier).
+
+Errors raised by a task are captured and re-raised (first one wins) from
+the next :meth:`barrier`/:meth:`close` on the ingest thread — a failed
+block write therefore aborts the flush *before* any recipe is committed,
+which is the same orphan-blocks-never-dangling-recipes guarantee the sync
+path has.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Callable, List, Optional
+
+_STOP = object()
+
+
+class AsyncWriteError(RuntimeError):
+    """A queued store write failed; the flush that submitted it must abort."""
+
+
+class ShardWriter:
+    """One shard's write queue: a single worker thread, bounded FIFO.
+
+    ``max_pending <= 0`` selects synchronous mode: ``submit`` runs the task
+    inline and ``barrier`` is a no-op — same interface, no thread, used for
+    the sync-flush configuration and as the degenerate 1-shard case.
+    """
+
+    def __init__(self, max_pending: int = 256, name: str = "shard-writer"):
+        self.async_mode = max_pending > 0
+        self._err: Optional[BaseException] = None
+        if not self.async_mode:
+            return
+        self._q: queue.Queue = queue.Queue(maxsize=max_pending)
+        self._thread = threading.Thread(target=self._loop, name=name, daemon=True)
+        self._thread.start()
+
+    def _loop(self):
+        while True:
+            task = self._q.get()
+            if task is _STOP:
+                self._q.task_done()
+                return
+            try:
+                if self._err is None:  # fail fast: drop work after an error
+                    task()
+            except BaseException as e:  # noqa: BLE001 — re-raised at barrier
+                self._err = e
+            finally:
+                self._q.task_done()
+
+    def submit(self, fn: Callable[[], None]):
+        """Queue one write; blocks when the queue is full (backpressure)."""
+        if not self.async_mode:
+            if self._err is None:
+                try:
+                    fn()
+                except BaseException as e:  # noqa: BLE001
+                    self._err = e
+            return
+        self._q.put(fn)
+
+    def barrier(self):
+        """Wait until every submitted write ran; re-raise the first failure."""
+        if self.async_mode:
+            self._q.join()
+        if self._err is not None:
+            err, self._err = self._err, None
+            raise AsyncWriteError("store write failed during flush") from err
+
+    def close(self):
+        """Drain and stop the worker; propagates any pending failure."""
+        if self.async_mode and self._thread.is_alive():
+            self._q.put(_STOP)
+            self._thread.join()
+        if self._err is not None:
+            err, self._err = self._err, None
+            raise AsyncWriteError("store write failed during flush") from err
+
+
+class WriterPool:
+    """Per-shard :class:`ShardWriter` fan-out with a pool-wide barrier."""
+
+    def __init__(self, num_shards: int, max_pending: int = 256):
+        self.writers: List[ShardWriter] = [
+            ShardWriter(max_pending, name=f"shard-writer-{s}")
+            for s in range(num_shards)
+        ]
+
+    def submit(self, shard: int, fn: Callable[[], None]):
+        self.writers[shard].submit(fn)
+
+    def barrier(self):
+        """Block until all shards drained; raise the first captured error."""
+        first: Optional[BaseException] = None
+        for w in self.writers:
+            try:
+                w.barrier()
+            except AsyncWriteError as e:
+                first = first or e
+        if first is not None:
+            raise first
+
+    def close(self):
+        first: Optional[BaseException] = None
+        for w in self.writers:
+            try:
+                w.close()
+            except AsyncWriteError as e:
+                first = first or e
+        if first is not None:
+            raise first
