@@ -1,0 +1,132 @@
+"""Scheduler occupancy under adversarial stream-length mixes (ROADMAP item).
+
+The chunk scheduler's half-octave length buckets cap *row* padding at 50%,
+but real traffic decides how much of that budget is spent: a bimodal mix
+keeps two bucket populations half-full, a heavy tail scatters rare huge
+streams into solo dispatches, and an all-tiny stream rides the
+``min_bucket`` floor where a 300-byte request pays for a 16 KiB row.  This
+benchmark ingests the same total byte budget under each distribution and
+reports what the batching actually delivers:
+
+* ``occupancy``       — real payload fraction of device traffic
+                        (``SchedulerStats.occupancy``);
+* ``pad_waste_pct``   — the complement: % of device bytes that were padding
+                        (length padding within rows + zero rows);
+* ``row_fill``        — dispatched rows that carried a request (the rest
+                        were zero rows squaring off partial buckets);
+* ``buckets``/``dispatches``/``tail_pct`` — compiled-shape count, device
+                        batches, and the host-side exact-tail fraction.
+
+Chunking math is identical across rows (same params, same two-phase
+pipeline); only the arrival-length distribution varies, so any occupancy
+delta is pure batching behavior, not chunking speed.
+"""
+from __future__ import annotations
+
+import json
+
+import numpy as np
+
+from repro.core.params import derived_params
+from repro.service import ChunkScheduler
+
+from . import common
+
+MASK_IMPL = "jnp"
+STEP_IMPL = "wide"
+
+#: stream-length distributions (drawn until the byte budget is filled)
+def _bimodal(rng):
+    if rng.random() < 0.8:
+        return int(rng.integers(512, 2048))
+    return int(rng.integers(256 << 10, 1 << 20))
+
+
+def _heavy_tail(rng):
+    # lognormal body with a hard floor/cap: occasional multi-hundred-KiB
+    # streams over a mass of small ones
+    return int(np.clip(rng.lognormal(mean=9.0, sigma=1.6), 256, 2 << 20))
+
+
+def _all_tiny(rng):
+    return int(rng.integers(100, 1000))
+
+
+def _uniform(rng):
+    return int(rng.integers(4 << 10, 64 << 10))
+
+
+DISTRIBUTIONS = {
+    "uniform": _uniform,      # control: the shape batching likes
+    "bimodal": _bimodal,
+    "heavy_tail": _heavy_tail,
+    "all_tiny": _all_tiny,
+}
+
+
+def _lengths(draw, total: int, rng) -> list:
+    out, acc = [], 0
+    while acc < total:
+        n = draw(rng)
+        out.append(n)
+        acc += n
+    return out
+
+
+def run(budget: str = "small") -> list:
+    total = {"quick": 2, "small": 8}.get(budget, 32) * common.MiB
+    params = derived_params(8192)
+    rows = []
+    for name, draw in DISTRIBUTIONS.items():
+        rng = np.random.default_rng(17)
+        lengths = _lengths(draw, total, rng)
+        # fingerprints off: occupancy is a property of batching, and the
+        # fp pass only dilutes the signal with unrelated device time
+        sched = ChunkScheduler(params, slots=8, mask_impl=MASK_IMPL,
+                               step_impl=STEP_IMPL, with_fingerprints=False)
+        payload = rng.integers(0, 256, int(sum(lengths)), dtype=np.uint8)
+        off = 0
+        for n in lengths:
+            sched.submit(payload[off:off + n])
+            off += n
+        results = sched.drain()
+        assert len(results) == len(lengths)
+        st = sched.stats
+        dispatched_rows = st.padded_rows + len(lengths)
+        rows.append({
+            "budget": budget,
+            "dist": name,
+            "streams": len(lengths),
+            "stream_mb": st.stream_bytes / common.MiB,
+            "device_mb": st.device_bytes / common.MiB,
+            "occupancy": st.occupancy,
+            "pad_waste_pct": 100.0 * (1.0 - st.occupancy),
+            "row_fill": len(lengths) / dispatched_rows,
+            "dispatches": st.dispatches,
+            "buckets": len(sched._jit_cache),
+            "tail_pct": 100.0 * st.tail_bytes / max(1, st.stream_bytes),
+            "mask_impl": MASK_IMPL,
+            "step_impl": STEP_IMPL,
+        })
+    common.emit(rows, "scheduler occupancy: adversarial length mixes")
+    return rows
+
+
+def main(argv=None) -> int:
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--json", default=None, metavar="PATH")
+    args = ap.parse_args(argv)
+    budget = "full" if args.full else ("quick" if args.quick else "small")
+    rows = run(budget)
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(rows, f, indent=1)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

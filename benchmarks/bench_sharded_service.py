@@ -61,6 +61,7 @@ def _cell(versions, total: int, shards: int, async_flush: bool,
         "budget": budget,
         "shards": shards,
         "async_flush": int(async_flush),
+        "transport": "local",
         "mask_impl": MASK_IMPL,
         "step_impl": STEP_IMPL,
         "corpus_mb": total / common.MiB,
@@ -77,7 +78,8 @@ def run(budget: str = "small") -> list:
     versions = common.version_corpus(budget)
     total = int(sum(v.size for v in versions))
     rows = []
-    for shards in (1, 2, 4, 8):
+    shard_counts = (1, 2) if budget == "quick" else (1, 2, 4, 8)
+    for shards in shard_counts:
         for async_flush in (False, True):
             rows.append(_cell(versions, total, shards, async_flush, budget))
     ratios = {f"{r['dedup_ratio']:.9f}" for r in rows}

@@ -39,8 +39,9 @@ def dataset(name: str, mb: int) -> np.ndarray:
 def version_corpus(budget: str) -> List[np.ndarray]:
     """The shared service-benchmark workload: a synthetic file-version
     series.  One definition so bench_service and bench_sharded_service rows
-    in BENCH_*.json are computed on the *same* corpus and stay comparable."""
-    base_mb, snaps = (2, 4) if budget == "small" else (16, 8)
+    in BENCH_*.json are computed on the *same* corpus and stay comparable.
+    Budgets: ``quick`` (trajectory smoke), ``small`` (default), else full."""
+    base_mb, snaps = {"quick": (1, 3), "small": (2, 4)}.get(budget, (16, 8))
     return list(corpus_mod.snapshot_series(
         base_bytes=base_mb * MiB, snapshots=snaps, edit_rate=5e-5, seed=7))
 

@@ -33,20 +33,36 @@ MODULES = [
     "bench_pipeline",         # framework-level (ingest + checkpoint)
     "bench_service",          # streaming dedup service (docs/SERVICE.md)
     "bench_sharded_service",  # sharded service (docs/SHARDING.md)
+    "bench_scheduler_occupancy",  # adversarial length mixes (docs/SERVICE.md)
+]
+
+#: the --quick subset: minutes-fast modules that understand the tiny
+#: budget, covering the service/scheduler trajectory (what PR-over-PR
+#: comparisons track) without the paper-figure sweeps
+QUICK_MODULES = [
+    "bench_service",
+    "bench_sharded_service",
+    "bench_scheduler_occupancy",
 ]
 
 #: configuration every benchmark uses unless its rows say otherwise
-DEFAULTS = {"mask_impl": "jnp", "step_impl": "wide", "shards": 1}
+DEFAULTS = {"mask_impl": "jnp", "step_impl": "wide", "shards": 1,
+            "transport": "local"}
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
+    ap.add_argument("--quick", action="store_true",
+                    help="minutes-fast trajectory profile: tiny corpora, "
+                         "service/scheduler modules only (QUICK_MODULES)")
     ap.add_argument("--only", default=None)
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="output JSON path (default BENCH_<budget>.json)")
     args = ap.parse_args()
-    budget = "full" if args.full else "small"
+    if args.full and args.quick:
+        ap.error("--full and --quick are mutually exclusive")
+    budget = "full" if args.full else ("quick" if args.quick else "small")
     # a --only run gets its own default file so iterating on one module
     # never clobbers the canonical full-run trajectory
     json_path = args.json or (
@@ -57,7 +73,8 @@ def main() -> None:
     from . import common
 
     common.reset_results()
-    mods = [m for m in MODULES if args.only is None or args.only in m]
+    base = QUICK_MODULES if args.quick else MODULES
+    mods = [m for m in base if args.only is None or args.only in m]
     ok = True
     failures = []
     for name in mods:

@@ -10,6 +10,7 @@ stage failed:
   2. core dev check           (scripts/dev_check_core.py)
   3. service dev check        (scripts/dev_check_service.py)
   4. sharded service check    (scripts/dev_check_sharded.py)
+  5. transport check          (scripts/dev_check_transport.py)
 
 This is what CI runs (.github/workflows/ci.yml); locally, ``--fast`` is the
 pre-commit loop and the full form is the pre-PR gate.
@@ -58,6 +59,8 @@ def main(argv=None) -> int:
         ("core check", [py, os.path.join("scripts", "dev_check_core.py")]),
         ("service check", [py, os.path.join("scripts", "dev_check_service.py")]),
         ("sharded check", [py, os.path.join("scripts", "dev_check_sharded.py")]),
+        ("transport check",
+         [py, os.path.join("scripts", "dev_check_transport.py")]),
     ]
 
     results = [_stage(name, cmd) for name, cmd in stages]

@@ -1,0 +1,104 @@
+"""Dev sanity: remote shard transport survives a mid-flush SIGKILL.
+
+Seconds-fast smoke for the transport subsystem (docs/SHARDING.md): spawns
+two real shard-server processes via ``ShardedDedupService.open(...,
+transport="remote")``, checks N=2-over-RPC equals the in-process service
+byte-for-byte, SIGKILLs one server mid-flush and asserts the clean
+``AsyncWriteError`` abort (nothing committed, name un-stranded), then
+restarts the server on the same root and verifies the depot state is fully
+recoverable (restores + gc).  Exits non-zero on failure.
+"""
+import os
+import sys
+import tempfile
+
+import numpy as np
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.core.params import SeqCDCParams
+from repro.data.corpus import snapshot_series
+from repro.service import AsyncWriteError, DedupService, ShardedDedupService
+
+fail = 0
+
+P = SeqCDCParams(avg_size=256, seq_length=3, skip_trigger=6, skip_size=32,
+                 min_size=64, max_size=512)
+versions = list(snapshot_series(base_bytes=1 << 16, snapshots=3,
+                                edit_rate=2e-5, seed=4))
+
+single = DedupService(params=P, slots=4, min_bucket=1024)
+for i, v in enumerate(versions):
+    single.submit(f"v{i}", v)
+single.flush()
+want = single.stats()
+
+with tempfile.TemporaryDirectory() as tmp:
+    root = os.path.join(tmp, "depot")
+
+    # 1) two shard-server processes: byte totals and restores equal in-process
+    svc = ShardedDedupService.open(root, 2, transport="remote",
+                                   params=P, slots=4, min_bucket=1024)
+    for i, v in enumerate(versions):
+        svc.submit(f"v{i}", v)
+    svc.flush()
+    st = svc.stats()
+    if (st.stored_bytes, st.unique_chunks) != (want.stored_bytes,
+                                               want.unique_chunks):
+        print("[remote N=2] byte totals diverged from in-process service")
+        fail += 1
+    for i, v in enumerate(versions):
+        if svc.get(f"v{i}") != v.tobytes():
+            print(f"[remote N=2] restore v{i} not byte-identical")
+            fail += 1
+
+    # 2) SIGKILL shard server 1 mid-flush: clean AsyncWriteError, no commit
+    victim = svc._servers[1]
+    orig_put = svc.stores[1].put
+
+    def killing_put(chunk):
+        victim.kill()
+        return orig_put(chunk)
+
+    svc.stores[1].put = killing_put
+    rng = np.random.default_rng(0)
+    svc.submit("doomed", rng.integers(0, 256, 8000, dtype=np.uint8))
+    try:
+        svc.flush()
+        print("[crash] flush survived a SIGKILLed shard server")
+        fail += 1
+    except AsyncWriteError:
+        pass
+    except Exception as e:  # noqa: BLE001
+        print(f"[crash] expected AsyncWriteError, got {type(e).__name__}: {e}")
+        fail += 1
+    if "doomed" in svc.names():
+        print("[crash] aborted flush committed a recipe")
+        fail += 1
+    svc.close()
+
+    # 3) restartable: fresh servers on the same roots serve the full depot
+    svc2 = ShardedDedupService.open(root, 2, transport="remote",
+                                    params=P, slots=4, min_bucket=1024)
+    for i, v in enumerate(versions):
+        if svc2.get(f"v{i}") != v.tobytes():
+            print(f"[restart] restore v{i} not byte-identical")
+            fail += 1
+    svc2.gc()  # reclaims shard-0 orphans the doomed flush left behind
+    data = rng.integers(0, 256, 8000, dtype=np.uint8)
+    svc2.put("doomed", data)  # the aborted name is not stranded
+    if svc2.get("doomed") != data.tobytes():
+        print("[restart] resubmitted object does not restore")
+        fail += 1
+    handles = list(svc2._servers)  # close() clears the list
+    svc2.close()
+    if any(h.proc.poll() is None for h in handles):
+        print("[restart] shard server processes leaked past close()")
+        fail += 1
+
+if fail:
+    print(f"FAIL ({fail})")
+    sys.exit(1)
+print(f"transport dev check OK: remote N=2 == in-process "
+      f"({want.unique_chunks} unique chunks), SIGKILL aborts cleanly, "
+      f"depot restartable")

@@ -1,0 +1,212 @@
+"""Offline N→M resharding: repartition a sharded depot without re-chunking.
+
+    PYTHONPATH=src python scripts/reshard.py --src DEPOT --dst NEW_DEPOT \\
+        --shards M [--refingerprint] [--no-verify] [--json REPORT]
+
+Streams every recipe from the N source shard roots, re-routes each chunk
+with the *same* consistent-hash rule ingest uses
+(``dedup.dist_index.owner_of(fp.h1, M)``), and writes M target shards plus
+a rewritten recipe table.  No re-chunking and no re-hashing: boundaries and
+SHA-256 keys are taken from the recipes, and the routing fingerprints come
+from the per-chunk ``ObjectRecipe.fps`` the services record at commit time.
+Because the rule is shared, a service reopened on the target depot routes
+new ingests onto exactly the owners the resharder chose — dedup against
+pre-reshard chunks keeps working.
+
+Write order is the service's own crash protocol — blocks, then recipes,
+then manifests — so an interrupted reshard leaves a target depot whose
+recipes never name missing bytes (rerun with a fresh --dst, or let ``gc``
+reclaim the partial blocks after deleting the target recipe table).
+
+Verification (on by default): per-chunk, the target store's content
+address must equal the recipe key (a byte flip in any source block makes
+``put`` return a different SHA-256 and aborts); per-depot, logical/stored
+byte totals and unique-chunk counts must match the source exactly; and
+every object is reassembled from the target shards and SHA-256-checked
+(``--no-verify`` skips only this last full-restore pass).
+
+``--refingerprint`` handles legacy recipes that predate fps recording by
+recomputing the 62-bit fingerprint from the chunk bytes (a polynomial pass
+per chunk — still no re-chunking, boundaries stay fixed).
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import hashlib
+import json
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np  # noqa: E402
+
+from repro.dedup.store import DirBlockStore  # noqa: E402
+from repro.service.depot import (  # noqa: E402 — the depot layout owner
+    pin_depot_shards,
+    read_depot_shards,
+    shard_roots,
+)
+from repro.service.objects import RecipeTable  # noqa: E402
+
+
+class ReshardError(RuntimeError):
+    """The repartition cannot proceed or failed verification."""
+
+
+def _read_shard_count(root: str) -> int:
+    n = read_depot_shards(root)
+    if n is None:
+        raise ReshardError(
+            f"{root!r} has no sharding.json — not a sharded depot "
+            f"(single-store depots open as 1-shard services first)"
+        )
+    return n
+
+
+def _chunk_h1(recipe, i: int, chunk: bytes, refingerprint: bool):
+    """Routing hash for one chunk: recorded fp preferred, recompute opt-in."""
+    if recipe.fps is not None:
+        return recipe.fps[i] >> 32, None
+    if not refingerprint:
+        raise ReshardError(
+            f"recipe {recipe.name!r} records no fingerprints (pre-fps "
+            f"depot); rerun with --refingerprint to recompute them from "
+            f"chunk bytes (boundaries are kept, nothing is re-chunked)"
+        )
+    from repro.dedup.fingerprint import fingerprints_numpy
+
+    fp = fingerprints_numpy(np.frombuffer(chunk, dtype=np.uint8),
+                            np.array([len(chunk)], dtype=np.int64))[0]
+    return int(fp[0]), (int(fp[0]) << 32) | int(fp[1])
+
+
+def reshard(src: str, dst: str, m: int, *, refingerprint: bool = False,
+            verify: bool = True) -> dict:
+    """Repartition ``src`` (N shards) into ``dst`` (M shards); returns the
+    verification report.  Raises :class:`ReshardError` on any mismatch."""
+    from repro.dedup.dist_index import owner_of  # the one normative rule
+
+    if m < 1:
+        raise ReshardError("target shard count must be >= 1")
+    n = _read_shard_count(src)
+    if read_depot_shards(dst) is not None:
+        raise ReshardError(f"target {dst!r} already holds a depot")
+    t0 = time.time()
+    src_stores = [DirBlockStore(r) for r in shard_roots(src, n)]
+    recipes = RecipeTable(os.path.join(src, "recipes.json"))
+
+    os.makedirs(dst, exist_ok=True)
+    pin_depot_shards(dst, m)
+    dst_stores = [DirBlockStore(r) for r in shard_roots(dst, m)]
+    dst_recipes = RecipeTable(os.path.join(dst, "recipes.json"))
+
+    chunks_moved = 0
+    for name in recipes.names():
+        r = recipes.get(name)
+        if r.shards is not None:
+            owners_old = r.shards
+        elif n == 1:
+            owners_old = [0] * len(r.keys)
+        else:
+            raise ReshardError(
+                f"recipe {name!r} has no shard map in an {n}-shard depot"
+            )
+        new_owners = []
+        new_fps = list(r.fps) if r.fps is not None else (
+            [] if refingerprint else None
+        )
+        for i, (key, old) in enumerate(zip(r.keys, owners_old)):
+            chunk = src_stores[old].get(key)
+            h1, packed = _chunk_h1(r, i, chunk, refingerprint)
+            if packed is not None:
+                new_fps.append(packed)
+            owner = int(owner_of(h1, m))
+            got = dst_stores[owner].put(chunk)
+            if got != key:
+                raise ReshardError(
+                    f"content mismatch for {name!r} chunk {i}: source shard "
+                    f"{old} returned bytes hashing to {got[:12]}..., recipe "
+                    f"says {key[:12]}... — source block is corrupt"
+                )
+            new_owners.append(owner)
+            chunks_moved += 1
+        dst_recipes.add(dataclasses.replace(r, shards=new_owners, fps=new_fps))
+
+    # blocks are on disk; commit recipes, then manifests (the crash order)
+    dst_recipes.sync()
+    for st in dst_stores:
+        st.sync()
+
+    report = {
+        "src": src, "dst": dst,
+        "src_shards": n, "dst_shards": m,
+        "objects": len(dst_recipes),
+        "chunk_refs": chunks_moved,
+        "logical_bytes": sum(st.logical_bytes for st in dst_stores),
+        "stored_bytes": sum(st.stored_bytes for st in dst_stores),
+        "unique_chunks": sum(st.unique_chunks for st in dst_stores),
+        "seconds": round(time.time() - t0, 3),
+    }
+    checks = {
+        "logical_bytes": sum(st.logical_bytes for st in src_stores),
+        "stored_bytes": sum(st.stored_bytes for st in src_stores),
+        "unique_chunks": sum(st.unique_chunks for st in src_stores),
+    }
+    for field, want in checks.items():
+        if report[field] != want:
+            raise ReshardError(
+                f"{field} changed across reshard: source {want}, "
+                f"target {report[field]}"
+            )
+    if verify:
+        for name in dst_recipes.names():
+            r = dst_recipes.get(name)
+            data = b"".join(dst_stores[s].get(k)
+                            for s, k in zip(r.shards, r.keys))
+            if (len(data) != r.size
+                    or hashlib.sha256(data).hexdigest() != r.sha256):
+                raise ReshardError(
+                    f"restore verification failed for {name!r} on the "
+                    f"target depot"
+                )
+        report["verified_objects"] = len(dst_recipes)
+    return report
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description=__doc__, formatter_class=argparse.RawDescriptionHelpFormatter
+    )
+    ap.add_argument("--src", required=True, help="source sharded depot root")
+    ap.add_argument("--dst", required=True,
+                    help="target depot root (must not already be a depot)")
+    ap.add_argument("--shards", "-m", type=int, required=True,
+                    help="target shard count M")
+    ap.add_argument("--refingerprint", action="store_true",
+                    help="recompute routing fps for pre-fps recipes "
+                         "(boundaries kept; no re-chunking)")
+    ap.add_argument("--no-verify", action="store_true",
+                    help="skip the full-restore SHA-256 pass "
+                         "(totals are always verified)")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write the report as JSON")
+    args = ap.parse_args(argv)
+    try:
+        report = reshard(args.src, args.dst, args.shards,
+                         refingerprint=args.refingerprint,
+                         verify=not args.no_verify)
+    except ReshardError as e:
+        print(f"reshard FAILED: {e}", file=sys.stderr)
+        return 1
+    print(json.dumps(report, indent=1))
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(report, f, indent=1)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,5 +1,27 @@
-"""repro.dedup — fingerprints, dedup index, distributed index, block store."""
-from .dist_index import owner_of, route_host  # noqa: F401
-from .fingerprint import chunk_fingerprints, fingerprints_numpy  # noqa: F401
-from .index import FingerprintIndex, dedup_stats, space_savings  # noqa: F401
-from .store import BlockStore, DirBlockStore, sha256_key  # noqa: F401
+"""repro.dedup — fingerprints, dedup index, distributed index, block store.
+
+Exports resolve lazily (``repro._lazy``): ``store`` is numpy+stdlib while
+``fingerprint``/``index``/``dist_index`` pull in jax, and a spawned shard
+server (``service/transport/shard_server.py``) needs only the former —
+lazy resolution keeps those processes accelerator-runtime-free.
+"""
+from repro._lazy import install as _install
+
+_EXPORTS = {
+    "owner_of": ".dist_index",
+    "route_host": ".dist_index",
+    "chunk_fingerprints": ".fingerprint",
+    "fingerprints_numpy": ".fingerprint",
+    "FingerprintIndex": ".index",
+    "dedup_stats": ".index",
+    "space_savings": ".index",
+    "BlockStore": ".store",
+    "DirBlockStore": ".store",
+    "sha256_key": ".store",
+}
+
+_SUBMODULES = ("dist_index", "fingerprint", "index", "store")
+
+__all__ = sorted(_EXPORTS) + list(_SUBMODULES)
+
+__getattr__, __dir__ = _install(__name__, _EXPORTS, _SUBMODULES)

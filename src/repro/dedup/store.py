@@ -10,7 +10,7 @@ from __future__ import annotations
 import hashlib
 import json
 import os
-from typing import Iterable
+from typing import Dict, Iterable, Tuple
 
 import numpy as np
 
@@ -42,6 +42,12 @@ class BlockStore:
 
     def get(self, key: str) -> bytes:
         return self.blocks[key]
+
+    def get_blocks(self, keys: Iterable[str]) -> list[bytes]:
+        """Batched get, one block per key.  The base form is a loop; the
+        remote store proxy overrides it with a single RPC, which is what
+        the sharded restore path batches per shard."""
+        return [self.get(k) for k in keys]
 
     def __contains__(self, key: str) -> bool:
         return key in self.refs
@@ -115,6 +121,12 @@ class BlockStore:
         """Alias for :meth:`release` (service-facing name)."""
         return self.release(key)
 
+    def release_many(self, keys: Iterable[str]) -> list[bool]:
+        """Batched :meth:`release`, one freed-flag per key.  The base form
+        is a loop; the remote store proxy overrides it with a single RPC,
+        which is what the sharded delete path batches per shard."""
+        return [self.release(k) for k in keys]
+
     def drop(self, key: str) -> int:
         """GC sweep: remove a block unconditionally, whatever its refcount.
 
@@ -131,12 +143,53 @@ class BlockStore:
         self.logical_bytes -= refs * size
         return size
 
+    def sweep(self, live: Dict[str, int]) -> Tuple[int, int, int]:
+        """One mark-and-sweep pass against recomputed liveness.
+
+        ``live`` is the truth (key -> reference count from the recipe
+        roots).  Sweeps :meth:`scan_keys` — which for file-backed stores
+        includes block files the refcount manifest never recorded —
+        dropping unreferenced blocks and repairing refcount drift.  Returns
+        ``(freed_blocks, freed_bytes, repaired_refs)``.
+
+        Lives on the store (not the service) because it only touches store
+        state — which is what lets a remote store run the whole pass next
+        to its data in one RPC (``transport/client.py`` overrides this).
+        """
+        freed_blocks = freed_bytes = repaired = 0
+        for key in self.scan_keys():
+            want = live.get(key, 0)
+            if want == 0:
+                freed_bytes += self.drop(key)
+                freed_blocks += 1
+            elif self.refs.get(key) != want:
+                self.repair_ref(key, want)
+                repaired += 1
+        return freed_blocks, freed_bytes, repaired
+
     def sync(self):
         """Make accounting durable (no-op for the in-memory backend).
 
         Uniform entry point so multi-store owners (the sharded service's
         per-shard flush) need not type-switch on the backend.
         """
+
+    @property
+    def unique_chunks(self) -> int:
+        """Number of unique blocks held (part of the stats surface shared
+        with the remote store proxy, which cannot expose a refs dict)."""
+        return len(self.refs)
+
+    def stat(self) -> Dict[str, int]:
+        """The accounting triple in one call — the shape consumers should
+        prefer over reading the three properties separately, because on the
+        remote store proxy each property is a full RPC and ``stat()`` is
+        exactly one."""
+        return {
+            "stored_bytes": self.stored_bytes,
+            "logical_bytes": self.logical_bytes,
+            "unique_chunks": self.unique_chunks,
+        }
 
     @property
     def savings(self) -> float:
@@ -195,8 +248,14 @@ class DirBlockStore(BlockStore):
         return key
 
     def get(self, key: str) -> bytes:
-        with open(self._path(key), "rb") as f:
-            return f.read()
+        try:
+            with open(self._path(key), "rb") as f:
+                return f.read()
+        except FileNotFoundError:
+            # missing blocks surface as KeyError on every backend (the
+            # in-memory store, this one, and the remote proxy), so callers
+            # and transports agree on the exception type
+            raise KeyError(key) from None
 
     def get_stream(self, keys: Iterable[str]) -> bytes:
         return b"".join(self.get(k) for k in keys)

@@ -5,21 +5,43 @@ addressed, refcounted) -> RecipeTable (object manifests, GC roots), fronted
 by DedupService (put/get/stat/delete + mark-and-sweep gc) and its
 fingerprint-partitioned multi-shard form ShardedDedupService
 (docs/SHARDING.md): owner-local stores/refcounts/GC behind per-shard async
-write queues, routed by dedup/dist_index's consistent-hash rule.
+write queues, routed by dedup/dist_index's consistent-hash rule, with the
+per-shard stores either in-process or behind the transport package's RPC
+boundary (``transport/``, docs/SHARDING.md).
+
+Exports resolve lazily (``repro._lazy``): the jax-heavy modules (api/
+scheduler/sharded) only import when first touched, so transport-only
+consumers — most importantly a spawned ``shard_server`` process, which
+imports ``repro.service.objects`` — stay numpy+stdlib and start in
+milliseconds.
 """
-from .api import (  # noqa: F401
-    DedupService,
-    GCStats,
-    IntegrityError,
-    ObjectStat,
-    ServiceStats,
-)
-from .objects import ObjectRecipe, RecipeTable  # noqa: F401
-from .scheduler import (  # noqa: F401
-    ChunkResult,
-    ChunkScheduler,
-    MaskDivergenceError,
-    SchedulerStats,
-)
-from .sharded import ShardedDedupService  # noqa: F401
-from .writer import AsyncWriteError, ShardWriter, WriterPool  # noqa: F401
+from repro._lazy import install as _install
+
+#: public name -> defining submodule (resolved on first attribute access)
+_EXPORTS = {
+    "DedupService": ".api",
+    "GCStats": ".api",
+    "IntegrityError": ".api",
+    "ObjectStat": ".api",
+    "ServiceStats": ".api",
+    "ObjectRecipe": ".objects",
+    "RecipeTable": ".objects",
+    "ChunkResult": ".scheduler",
+    "ChunkScheduler": ".scheduler",
+    "MaskDivergenceError": ".scheduler",
+    "SchedulerStats": ".scheduler",
+    "ShardedDedupService": ".sharded",
+    "AsyncWriteError": ".writer",
+    "ShardWriter": ".writer",
+    "WriterPool": ".writer",
+    "RemoteShardClient": ".transport",
+    "ShardServerProcess": ".transport",
+    "ShardTransportError": ".transport",
+}
+
+_SUBMODULES = ("api", "depot", "objects", "scheduler", "sharded", "transport",
+               "writer")
+
+__all__ = sorted(_EXPORTS) + list(_SUBMODULES)
+
+__getattr__, __dir__ = _install(__name__, _EXPORTS, _SUBMODULES)

@@ -53,20 +53,25 @@ def sweep_store(store: BlockStore, live: Dict[str, int]) -> "GCStats":
     """One store's mark-and-sweep pass, shared by both services.
 
     ``live`` is the recomputed truth (key -> reference count from the recipe
-    roots).  Sweeps :meth:`~repro.dedup.BlockStore.scan_keys` — which for
-    file-backed stores includes block files the refcount manifest never
-    recorded — dropping unreferenced blocks and repairing refcount drift.
+    roots).  The pass itself is :meth:`~repro.dedup.BlockStore.sweep` —
+    store-local so a remote store (``transport/client.py``) runs it next to
+    its data in one RPC instead of one round trip per key.
     """
-    freed_blocks = freed_bytes = repaired = 0
-    for key in store.scan_keys():
-        want = live.get(key, 0)
-        if want == 0:
-            freed_bytes += store.drop(key)
-            freed_blocks += 1
-        elif store.refs.get(key) != want:
-            store.repair_ref(key, want)
-            repaired += 1
-    return GCStats(freed_blocks, freed_bytes, repaired)
+    return GCStats(*store.sweep(live))
+
+
+def pack_fps(fps) -> List[int]:
+    """Per-chunk 62-bit fingerprints packed to ``(h1 << 32) | h2`` ints for
+    the recipe (``ObjectRecipe.fps``).
+
+    Recording them is what makes a depot *reshardable*: routing is by
+    ``owner_of(fp.h1, N)``, which the SHA-256 key cannot reproduce, so an
+    N→M repartition (scripts/reshard.py) would otherwise have to re-chunk
+    and re-hash every object.
+    """
+    import numpy as np
+
+    return [(int(h1) << 32) | int(h2) for h1, h2 in np.asarray(fps).tolist()]
 
 
 def recipe_totals(recipes: RecipeTable) -> tuple[int, int, Dict[int, int]]:
@@ -265,6 +270,9 @@ class DedupService(ServiceBase):
             sha256=hashlib.sha256(res.data).hexdigest(),
             keys=keys,
             chunk_lens=res.lengths.astype(int).tolist(),
+            # recorded when the scheduler fingerprinted (reshardability);
+            # with_fingerprints=False leaves the field absent
+            fps=pack_fps(res.fps) if res.fps.shape[0] == len(keys) else None,
         )
         if res.fps.size:
             self.fp_index.add_batch(res.fps, res.lengths)
@@ -331,7 +339,7 @@ class DedupService(ServiceBase):
             logical_bytes=logical,
             stored_bytes=self.store.stored_bytes,
             total_chunks=total_chunks,
-            unique_chunks=len(self.store.refs),
+            unique_chunks=self.store.unique_chunks,
             chunk_size_hist=hist,
             fp_estimated_savings=self.fp_index.savings,
             batches=sched.dispatches,

@@ -31,19 +31,27 @@ class ObjectRecipe:
     #: Routing is by accelerator fingerprint, which a restore cannot recompute
     #: from the SHA key alone, so the owner must be recorded at commit time.
     shards: Optional[List[int]] = None
+    #: per-chunk 62-bit accelerator fingerprint, packed ``(h1 << 32) | h2``
+    #: (None = ingested before fps were recorded, or fingerprints disabled).
+    #: This is what lets scripts/reshard.py re-route every chunk with the
+    #: shared consistent-hash rule without re-chunking or re-hashing.
+    fps: Optional[List[int]] = None
 
     def to_json(self) -> dict:
         d = dataclasses.asdict(self)
-        if self.shards is None:  # keep single-store tables byte-stable
-            d.pop("shards")
+        for opt in ("shards", "fps"):  # keep legacy tables byte-stable
+            if d[opt] is None:
+                d.pop(opt)
         return d
 
     @classmethod
     def from_json(cls, d: dict) -> "ObjectRecipe":
         shards = d.get("shards")
+        fps = d.get("fps")
         return cls(name=d["name"], size=int(d["size"]), sha256=d["sha256"],
                    keys=list(d["keys"]), chunk_lens=[int(x) for x in d["chunk_lens"]],
-                   shards=[int(s) for s in shards] if shards is not None else None)
+                   shards=[int(s) for s in shards] if shards is not None else None,
+                   fps=[int(f) for f in fps] if fps is not None else None)
 
 
 class RecipeTable:

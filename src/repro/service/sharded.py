@@ -37,6 +37,16 @@ synced, so a crash at any point leaves orphan blocks (reclaimed by
 accelerator fingerprint, which the SHA key alone cannot reproduce); ``get``
 gathers chunks across shards and verifies the whole-object SHA-256, exactly
 like the single-store service.
+
+**Transports.**  ``transport="local"`` (default) keeps every shard's
+``BlockStore`` in-process.  ``transport="remote"`` moves each shard behind
+a process boundary: :meth:`open` spawns one ``shard_server`` process per
+shard directory and wires a :class:`~repro.service.transport.RemoteShardClient`
+— which implements the same store surface — into the writer seam.  Nothing
+else changes: the scheduler, the Pallas mask path, and fp routing via
+``dist_index.owner_of`` are bit-identical across transports, and the
+on-disk layout is too, so a depot reopens under either transport
+(docs/SHARDING.md documents the wire protocol and failure semantics).
 """
 from __future__ import annotations
 
@@ -58,13 +68,18 @@ from .api import (
     ObjectStat,
     ServiceBase,
     ServiceStats,
+    pack_fps,
     recipe_totals,
     sweep_store,
     verify_restore,
 )
+from .depot import pin_depot_shards, read_depot_shards, shard_roots
 from .objects import ObjectRecipe, RecipeTable
 from .scheduler import ChunkResult, ChunkScheduler
+from .transport.client import spawn_shard_servers
 from .writer import WriterPool
+
+TRANSPORTS = ("local", "remote")
 
 
 class ShardedDedupService(ServiceBase):
@@ -88,9 +103,23 @@ class ShardedDedupService(ServiceBase):
         mesh=None,
         mesh_axis: str = "data",
         capacity_factor: float = 1.5,
+        transport: str = "local",
     ):
         if stores is not None and len(stores) != num_shards:
             raise ValueError(f"{len(stores)} stores for {num_shards} shards")
+        if transport not in TRANSPORTS:
+            raise ValueError(f"transport must be one of {TRANSPORTS}, "
+                             f"got {transport!r}")
+        if transport == "remote" and stores is None:
+            raise ValueError(
+                "transport='remote' needs shard servers: use "
+                "ShardedDedupService.open(root, N, transport='remote') to "
+                "spawn them, or pass stores=[RemoteShardClient(...), ...]"
+            )
+        self.transport = transport
+        #: ShardServerProcess handles when :meth:`open` spawned the servers
+        #: (empty for user-provided clients and for the local transport)
+        self._servers: list = []
         self.num_shards = int(num_shards)
         if self.num_shards < 1:
             raise ValueError("num_shards must be >= 1")
@@ -145,32 +174,51 @@ class ShardedDedupService(ServiceBase):
         """File-backed sharded service: one block depot per shard under
         ``root/shard-NN/`` plus a shared recipe table.  The shard count is
         pinned in ``root/sharding.json`` — reopening with a different N would
-        scatter the partition map, so it is a hard error.
+        scatter the partition map, so it is a hard error (repartitioning is
+        what ``scripts/reshard.py`` is for).
+
+        ``transport="remote"`` spawns one ``shard_server`` process per shard
+        directory and wires remote clients in place of the in-process
+        stores; the servers are stopped by :meth:`close`.  The on-disk
+        layout is transport-independent, so the same depot reopens under
+        either transport.
         """
         if num_shards < 1:  # validate before the depot meta is persisted:
             # a bad first call must not poison root/sharding.json
             raise ValueError("num_shards must be >= 1")
         os.makedirs(root, exist_ok=True)
-        meta_path = os.path.join(root, "sharding.json")
-        if os.path.exists(meta_path):
-            with open(meta_path) as f:
-                want = int(json.load(f)["num_shards"])
-            if want != num_shards:
-                raise ValueError(
-                    f"depot {root!r} was created with num_shards={want}, "
-                    f"reopen requested {num_shards}"
-                )
-        else:
-            tmp = meta_path + ".tmp"
-            with open(tmp, "w") as f:
-                json.dump({"num_shards": int(num_shards)}, f)
-            os.replace(tmp, meta_path)
-        stores = [
-            DirBlockStore(os.path.join(root, f"shard-{s:02d}"))
-            for s in range(num_shards)
-        ]
-        recipes = RecipeTable(os.path.join(root, "recipes.json"))
-        return cls(num_shards, stores=stores, recipes=recipes, **kwargs)
+        want = read_depot_shards(root)
+        if want is not None and want != num_shards:
+            raise ValueError(
+                f"depot {root!r} was created with num_shards={want}, "
+                f"reopen requested {num_shards}"
+            )
+        pinned_here = want is None
+        if pinned_here:
+            pin_depot_shards(root, num_shards)
+        servers = []
+        try:
+            roots = shard_roots(root, num_shards)
+            if kwargs.get("transport") == "remote":
+                servers = spawn_shard_servers(roots)
+                stores = [h.connect() for h in servers]
+            else:
+                stores = [DirBlockStore(r) for r in roots]
+            recipes = RecipeTable(os.path.join(root, "recipes.json"))
+            svc = cls(num_shards, stores=stores, recipes=recipes, **kwargs)
+        except BaseException:
+            for h in servers:
+                h.stop()
+            if pinned_here:
+                # the open never produced a service: a retry must be free
+                # to pick a different N, so un-poison the fresh pin
+                try:
+                    os.remove(os.path.join(root, "sharding.json"))
+                except OSError:
+                    pass
+            raise
+        svc._servers = servers
+        return svc
 
     # -- ingest -----------------------------------------------------------------
     def flush(self) -> List[ObjectStat]:
@@ -221,6 +269,7 @@ class ShardedDedupService(ServiceBase):
                 keys=list(keys),  # type: ignore[arg-type]
                 chunk_lens=res.lengths.astype(int).tolist(),
                 shards=[int(o) for o in owners],
+                fps=pack_fps(res.fps),  # fps are mandatory here: reshardable
             )
             self.recipes.add(recipe)
             out.append(ObjectStat.of(recipe))
@@ -229,8 +278,11 @@ class ShardedDedupService(ServiceBase):
         self._ingest_fps(results)
         self.sync()
         if stale:
+            by_shard: dict[int, List[str]] = {}
             for shard, key in stale:
-                self.writers.submit(shard, self._release_task(shard, key))
+                by_shard.setdefault(shard, []).append(key)
+            for shard, keys in by_shard.items():
+                self.writers.submit(shard, self._release_task(shard, keys))
             self.writers.barrier()
             self.sync()
         return out
@@ -244,9 +296,9 @@ class ShardedDedupService(ServiceBase):
 
         self.writers.submit(owner, task)
 
-    def _release_task(self, shard: int, key: str):
+    def _release_task(self, shard: int, keys: List[str]):
         store = self.stores[shard]
-        return lambda: store.release(key)
+        return lambda: store.release_many(keys)
 
     def _owners_for(self, res: ChunkResult) -> np.ndarray:
         """Owner shard per chunk of one result (dist_index's hash rule)."""
@@ -321,13 +373,23 @@ class ShardedDedupService(ServiceBase):
     # -- serve ------------------------------------------------------------------
     def get(self, name: str) -> bytes:
         """Reassemble an object, gathering chunks across owner shards;
-        verifies length and whole-object SHA-256 (:class:`IntegrityError`)."""
+        verifies length and whole-object SHA-256 (:class:`IntegrityError`).
+
+        Chunk fetches are batched per owner shard (one ``get_blocks`` call
+        each) — for the remote transport that is one RPC per shard instead
+        of one per chunk — then spliced back into stream order.
+        """
         r = self.recipes.get(name)
-        parts = [
-            self.stores[shard].get(key)
-            for shard, key in zip(self._recipe_shards(r), r.keys)
-        ]
-        return verify_restore(r, b"".join(parts))
+        owners = self._recipe_shards(r)
+        by_shard: dict[int, List[int]] = {}
+        for i, shard in enumerate(owners):
+            by_shard.setdefault(shard, []).append(i)
+        parts: List[Optional[bytes]] = [None] * len(r.keys)
+        for shard, idxs in by_shard.items():
+            blocks = self.stores[shard].get_blocks([r.keys[i] for i in idxs])
+            for i, b in zip(idxs, blocks):
+                parts[i] = b
+        return verify_restore(r, b"".join(parts))  # type: ignore[arg-type]
 
     # -- delete / GC ------------------------------------------------------------
     def delete(self, name: str) -> int:
@@ -341,18 +403,23 @@ class ShardedDedupService(ServiceBase):
         r = self.recipes.remove(name)  # KeyError for unknown objects
         self.recipes.sync()
         freed = [0] * self.num_shards
+        by_shard: dict[int, List[tuple[str, int]]] = {}
         for shard, key, ln in zip(self._recipe_shards(r), r.keys, r.chunk_lens):
-            self.writers.submit(shard, self._free_task(shard, key, ln, freed))
+            by_shard.setdefault(shard, []).append((key, ln))
+        for shard, pairs in by_shard.items():
+            self.writers.submit(shard, self._free_task(shard, pairs, freed))
         self.writers.barrier()
         self.sync()
         return sum(freed)
 
-    def _free_task(self, shard: int, key: str, ln: int, freed: List[int]):
+    def _free_task(self, shard: int, pairs: List[tuple[str, int]],
+                   freed: List[int]):
+        """One shard's batched release — a single RPC for a remote store."""
         store = self.stores[shard]
 
         def task():
-            if store.release(key):
-                freed[shard] += ln
+            flags = store.release_many([k for k, _ in pairs])
+            freed[shard] = sum(ln for (_, ln), f in zip(pairs, flags) if f)
 
         return task
 
@@ -395,8 +462,23 @@ class ShardedDedupService(ServiceBase):
             store.sync()
 
     def close(self):
-        """Drain writers and stop their threads (propagates write errors)."""
-        self.writers.close()
+        """Drain writers and stop their threads (propagates write errors);
+        spawned shard servers are shut down even when the drain fails."""
+        try:
+            self.writers.close()
+        finally:
+            for h, st in zip(self._servers, self.stores):
+                try:
+                    h.stop(st)
+                except Exception:  # noqa: BLE001 — dead server is fine here
+                    pass
+            self._servers = []
+            if self.transport == "remote":
+                for st in self.stores:
+                    try:
+                        st.close()
+                    except Exception:  # noqa: BLE001
+                        pass
 
     def __enter__(self) -> "ShardedDedupService":
         return self
@@ -412,12 +494,13 @@ class ShardedDedupService(ServiceBase):
         fp_orig = sum(ix.original_bytes for ix in self.fp_index)
         fp_dedup = sum(ix.dedup_bytes for ix in self.fp_index)
         sched = self.scheduler.stats
+        per = [st.stat() for st in self.stores]  # one RPC per remote shard
         return ServiceStats(
             objects=len(self.recipes),
             logical_bytes=logical,
-            stored_bytes=sum(st.stored_bytes for st in self.stores),
+            stored_bytes=sum(p["stored_bytes"] for p in per),
             total_chunks=total_chunks,
-            unique_chunks=sum(len(st.refs) for st in self.stores),
+            unique_chunks=sum(p["unique_chunks"] for p in per),
             chunk_size_hist=hist,
             fp_estimated_savings=(fp_orig - fp_dedup) / fp_orig if fp_orig else 0.0,
             batches=sched.dispatches,
@@ -426,13 +509,14 @@ class ShardedDedupService(ServiceBase):
 
     def shard_stats(self) -> List[dict]:
         """Per-shard breakdown: balance of the fingerprint partition."""
-        return [
-            {
+        out = []
+        for s, st in enumerate(self.stores):
+            acct = st.stat()  # one RPC per remote shard
+            out.append({
                 "shard": s,
-                "stored_bytes": st.stored_bytes,
-                "logical_bytes": st.logical_bytes,
-                "unique_chunks": len(st.refs),
+                "stored_bytes": acct["stored_bytes"],
+                "logical_bytes": acct["logical_bytes"],
+                "unique_chunks": acct["unique_chunks"],
                 "fp_entries": len(self.fp_index[s].seen),
-            }
-            for s, st in enumerate(self.stores)
-        ]
+            })
+        return out

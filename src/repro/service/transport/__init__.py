@@ -1,0 +1,29 @@
+"""repro.service.transport — shard stores behind a process/RPC boundary.
+
+The writer seam of the sharded service, made remote (docs/SHARDING.md):
+
+* ``protocol``     — length-prefixed, versioned binary frames covering the
+                     full writer-seam op set (put_blocks, put_recipe,
+                     put_manifest, release, stat, get_blocks, gc_mark/sweep,
+                     ping/shutdown) with typed error propagation;
+* ``shard_server`` — a standalone, jax-free process wrapping one owner-local
+                     ``DirBlockStore`` (``python -m
+                     repro.service.transport.shard_server --root ... --port ...``);
+* ``client``       — ``RemoteShardClient`` (the store surface over RPC) and
+                     ``ShardServerProcess`` (spawn/stop/kill lifecycle).
+
+Everything here is stdlib + numpy; the package is what makes later
+multi-host steps (chunk-data all_to_all, real RPC backends) a transport
+swap instead of a service rewrite.
+"""
+from .client import (  # noqa: F401
+    RemoteShardClient,
+    ShardServerProcess,
+    spawn_shard_servers,
+)
+from .protocol import (  # noqa: F401
+    OP_NAMES,
+    VERSION,
+    ProtocolError,
+    ShardTransportError,
+)

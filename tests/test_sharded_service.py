@@ -293,6 +293,7 @@ def test_mask_divergence_raises(rng, monkeypatch):
 
 # -- mesh all_to_all routing (subprocess: fixed device count) -------------------
 
+@pytest.mark.timeout(600)
 def test_mesh_routed_ingest_matches_host():
     env = dict(os.environ)
     env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"

@@ -1,0 +1,124 @@
+"""service/writer.py backpressure semantics (ISSUE 3 satellite).
+
+The contract under load and under failure:
+
+* a full bounded FIFO *blocks* the producer — it never drops a task and
+  never buffers unboundedly;
+* a failed store write surfaces as ``AsyncWriteError`` at the barrier,
+  *before* any recipe commit or manifest sync runs, with the submitted
+  names un-stranded (resubmission works).
+"""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.params import SeqCDCParams
+from repro.service import (
+    AsyncWriteError,
+    ShardedDedupService,
+    ShardWriter,
+    WriterPool,
+)
+
+P = SeqCDCParams(avg_size=256, seq_length=3, skip_trigger=6, skip_size=32,
+                 min_size=64, max_size=512)
+
+
+def test_full_fifo_blocks_producer_and_drops_nothing():
+    w = ShardWriter(max_pending=2)
+    gate = threading.Event()
+    started = threading.Event()
+    ran = []
+    w.submit(lambda: (started.set(), gate.wait(30), ran.append(0)))
+    assert started.wait(10)  # worker holds task 0; queue is now empty
+    w.submit(lambda: ran.append(1))
+    w.submit(lambda: ran.append(2))  # queue at max_pending
+
+    submitted = threading.Event()
+
+    def producer():
+        w.submit(lambda: ran.append(3))  # must block until the gate opens
+        submitted.set()
+
+    t = threading.Thread(target=producer, daemon=True)
+    t.start()
+    time.sleep(0.3)
+    assert not submitted.is_set(), "submit returned on a full queue"
+
+    gate.set()
+    assert submitted.wait(10), "producer never unblocked"
+    t.join(10)
+    w.barrier()
+    assert ran == [0, 1, 2, 3]  # FIFO, all four ran, none dropped
+    w.close()
+
+
+def test_pool_partial_failure_keeps_other_shards_working():
+    pool = WriterPool(2, max_pending=4)
+    ran = []
+    pool.submit(0, lambda: ran.append("ok"))
+    pool.submit(1, lambda: (_ for _ in ()).throw(OSError("disk gone")))
+    pool.submit(0, lambda: ran.append("ok2"))
+    with pytest.raises(AsyncWriteError):
+        pool.barrier()
+    assert ran == ["ok", "ok2"]  # the healthy shard drained fully
+    pool.barrier()  # error was consumed; the pool is healthy again
+    pool.close()
+
+
+def test_failed_flush_aborts_before_any_commit_or_sync(rng, monkeypatch):
+    """AsyncWriteError from a failed block write aborts the flush before
+    recipe commit AND before any manifest sync, and the in-flight names are
+    released for resubmission."""
+    svc = ShardedDedupService(2, params=P, slots=2, min_bucket=1024,
+                              async_flush=True, max_pending=4)
+    syncs = {"recipes": 0, "stores": 0}
+    real_recipe_sync = svc.recipes.sync
+    monkeypatch.setattr(
+        svc.recipes, "sync",
+        lambda: (syncs.__setitem__("recipes", syncs["recipes"] + 1),
+                 real_recipe_sync())[-1])
+    for st in svc.stores:
+        real = st.sync
+        monkeypatch.setattr(
+            st, "sync",
+            lambda real=real: (syncs.__setitem__("stores", syncs["stores"] + 1),
+                               real())[-1])
+
+    real_puts = [st.put for st in svc.stores]
+    boom = lambda chunk: (_ for _ in ()).throw(OSError("disk gone"))
+    for st in svc.stores:
+        monkeypatch.setattr(st, "put", boom)
+
+    data = rng.integers(0, 256, 6000, dtype=np.uint8)
+    svc.submit("x", data)
+    with pytest.raises(AsyncWriteError):
+        svc.flush()
+    assert len(svc.recipes) == 0, "recipe committed after a failed write"
+    assert syncs == {"recipes": 0, "stores": 0}, \
+        "manifest/recipe sync ran despite the aborted flush"
+
+    # the name is un-stranded: the same object resubmits and commits
+    for st, put in zip(svc.stores, real_puts):
+        monkeypatch.setattr(st, "put", put)
+    svc.put("x", data)
+    assert svc.get("x") == data.tobytes()
+    assert syncs["recipes"] > 0 and syncs["stores"] > 0
+    svc.close()
+
+
+def test_sync_mode_inline_error_still_aborts(rng, monkeypatch):
+    """max_pending=0 (sync writers): the same abort-before-commit contract
+    holds without any worker thread in the loop."""
+    svc = ShardedDedupService(2, params=P, slots=2, min_bucket=1024,
+                              async_flush=False)
+    for st in svc.stores:
+        monkeypatch.setattr(
+            st, "put", lambda chunk: (_ for _ in ()).throw(OSError("nope")))
+    svc.submit("y", rng.integers(0, 256, 4000, dtype=np.uint8))
+    with pytest.raises(AsyncWriteError):
+        svc.flush()
+    assert len(svc.recipes) == 0
+    svc.close()
