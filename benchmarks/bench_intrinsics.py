@@ -5,6 +5,12 @@ and skip triggering depend on them.  Our TPU mapping replaces them with
 masked argmin (ffs), cumsum+argmax (pdep/tzcnt) and sum-of-bools (popcnt)
 over W-wide blocks (DESIGN.md SS2); this bench times each primitive and the
 two automaton step implementations built from them.
+
+It also times the chunk-hashing hot path both ways — the jnp
+searchsorted/gather/segment_sum chain (``fp_impl="reference"``) against the
+fused Pallas fingerprint kernel (``fp_impl="pallas"``, docs/KERNELS.md) —
+and records the speedup, the number the follow-up vector-chunking paper
+says dominates once boundary detection is fast.
 """
 from __future__ import annotations
 
@@ -13,15 +19,46 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import paper_params
+from repro.core.automaton import max_chunks_for
+from repro.core.params import derived_params
 from repro.core.seqcdc import boundaries_two_phase
+from repro.dedup.fingerprint import chunk_fingerprints
 
 from .common import emit, random_data, time_throughput
 
 _BIG = jnp.int32(1 << 30)
 
 
+def _fingerprint_rows(budget: str, mb: int) -> list:
+    """fp_impl="reference" vs "pallas" on one pre-chunked stream."""
+    p = derived_params(8192)
+    n = mb << 20
+    data = jnp.asarray(random_data(mb, seed=5))
+    mc = max_chunks_for(n, p)
+    bounds, count = jax.block_until_ready(
+        boundaries_two_phase(data, p, max_chunks=mc)
+    )
+    rows = []
+    gbps = {}
+    for impl in ("reference", "pallas"):
+        fn = jax.jit(
+            lambda d, b, c, impl=impl: chunk_fingerprints(
+                d, b, c, max_chunks=mc, fp_impl=impl
+            )
+        )
+        res = time_throughput(
+            lambda: jax.block_until_ready(fn(data, bounds, count)), n
+        )
+        gbps[impl] = res["gbps"]
+        rows.append({"figure": "fingerprint-kernel", "budget": budget,
+                     "fp_impl": impl, "stream_mb": mb,
+                     "gbits_per_s": res["gbps"]})
+    rows[-1]["speedup_vs_reference"] = gbps["pallas"] / gbps["reference"]
+    return rows
+
+
 def run(budget: str = "small"):
-    mb = 8 if budget == "small" else 32
+    mb = {"quick": 2, "small": 8}.get(budget, 32)
     n = mb << 20
     rng = np.random.default_rng(3)
     bits = jnp.asarray(rng.random(n) < 0.01)
@@ -51,6 +88,7 @@ def run(budget: str = "small"):
         res = time_throughput(lambda: jax.block_until_ready(fn(data)), n)
         rows.append({"figure": "sec5-intrinsics", "primitive": f"automaton-{impl}",
                      "gbits_per_s": res["gbps"], "block_w": p.block_width})
+    rows.extend(_fingerprint_rows(budget, mb))
     emit(rows, "VPU-primitive microbench (paper SSV analogue)")
     return rows
 

@@ -27,6 +27,7 @@ from . import common
 
 MASK_IMPL = "jnp"
 STEP_IMPL = "wide"
+FP_IMPL = "reference"
 
 
 def _raw_chunking_gbps(corpus: np.ndarray, params, seg: int = 1 << 20,
@@ -64,7 +65,8 @@ def run(budget: str = "small") -> None:
         # warmup pass compiles the per-bucket programs, then a timed cold store
         for _ in range(2):
             svc = DedupService(params=params, slots=8, with_fingerprints=with_fp,
-                               mask_impl=MASK_IMPL, step_impl=STEP_IMPL)
+                               mask_impl=MASK_IMPL, step_impl=STEP_IMPL,
+                               fp_impl=FP_IMPL)
             t0 = time.perf_counter()
             for i, v in enumerate(versions):
                 svc.submit(f"v{i:03d}", v)
@@ -82,6 +84,7 @@ def run(budget: str = "small") -> None:
             "shards": 1,
             "mask_impl": MASK_IMPL,
             "step_impl": STEP_IMPL,
+            "fp_impl": FP_IMPL,
             "fingerprints": int(with_fp),
             "corpus_mb": total / common.MiB,
             "versions": len(versions),

@@ -38,16 +38,19 @@ MODULES = [
 
 #: the --quick subset: minutes-fast modules that understand the tiny
 #: budget, covering the service/scheduler trajectory (what PR-over-PR
-#: comparisons track) without the paper-figure sweeps
+#: comparisons track) without the paper-figure sweeps; bench_intrinsics
+#: rides along for its fingerprint-kernel speedup rows (fp_impl
+#: "reference" vs "pallas")
 QUICK_MODULES = [
     "bench_service",
     "bench_sharded_service",
     "bench_scheduler_occupancy",
+    "bench_intrinsics",
 ]
 
 #: configuration every benchmark uses unless its rows say otherwise
-DEFAULTS = {"mask_impl": "jnp", "step_impl": "wide", "shards": 1,
-            "transport": "local"}
+DEFAULTS = {"mask_impl": "jnp", "step_impl": "wide", "fp_impl": "reference",
+            "shards": 1, "transport": "local"}
 
 
 def main() -> None:

@@ -1,4 +1,6 @@
-"""Dev sanity: all SeqCDC implementations agree with the slow oracle."""
+"""Dev sanity: all SeqCDC implementations agree with the slow oracle, and
+the fused Pallas fingerprint kernel (CPU interpret mode) is bit-identical
+to the numpy reference over the same case sweep."""
 import os
 import sys
 
@@ -53,4 +55,23 @@ for params in [small, paper_params(8192), paper_params(4096), paper_params(16384
                 print("  got", got[:8], "... len", len(got))
                 print("  ref", ref[:8], "... len", len(ref))
                 fail += 1
+
+# fingerprint parity: the fused Pallas kernel (interpret mode on CPU) must
+# match the host numpy reference bit-for-bit on real chunker output
+from repro.core.automaton import max_chunks_for
+from repro.dedup.fingerprint import chunk_fingerprints, fingerprints_numpy
+
+for i, d in enumerate(cases):
+    if d.size == 0:
+        continue
+    b, c = seqcdc.boundaries_two_phase(jnp.asarray(d), small)
+    mc = max_chunks_for(d.size, small)
+    fp, _ = chunk_fingerprints(jnp.asarray(d), b, c, max_chunks=mc,
+                               fp_impl="pallas")
+    want = fingerprints_numpy(d, np.asarray(b)[: int(c)])
+    if not np.array_equal(np.asarray(fp)[: int(c)], want):
+        print(f"[fp-pallas] case{i} n={d.size}: kernel != numpy reference")
+        fail += 1
+
 print("FAILURES:", fail)
+sys.exit(1 if fail else 0)

@@ -54,13 +54,13 @@ with tempfile.TemporaryDirectory() as tmp:
 
     # 2) SIGKILL shard server 1 mid-flush: clean AsyncWriteError, no commit
     victim = svc._servers[1]
-    orig_put = svc.stores[1].put
+    orig_put = svc.stores[1].put_blocks  # the coalesced writer hot path
 
-    def killing_put(chunk):
+    def killing_put(chunks):
         victim.kill()
-        return orig_put(chunk)
+        return orig_put(chunks)
 
-    svc.stores[1].put = killing_put
+    svc.stores[1].put_blocks = killing_put
     rng = np.random.default_rng(0)
     svc.submit("doomed", rng.integers(0, 256, 8000, dtype=np.uint8))
     try:

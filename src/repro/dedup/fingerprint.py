@@ -21,10 +21,17 @@ overflow bound).  All chunking configs here have max_size <= 64 KiB.
 from __future__ import annotations
 
 import functools
+from typing import Literal
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+#: backend for :func:`chunk_fingerprints`: the jnp ``searchsorted``/gather/
+#: ``segment_sum`` chain ("reference") or the fused Pallas kernel
+#: (kernels/fingerprint.py) — bit-identical, guarded by the scheduler's
+#: first-dispatch cross-check (docs/KERNELS.md)
+FpImpl = Literal["reference", "pallas"]
 
 P31 = np.uint32((1 << 31) - 1)
 MAX_CHUNK = 1 << 16
@@ -49,14 +56,21 @@ def _rot31(x, k: int):
     return ((x << k) | (x >> (31 - k))) & P31
 
 
-def _byte_mulmod(b, y):
-    """b * y mod p for b in [0,256), y < p — 8 conditional rotations."""
+def _mulmod(b, y, bits: int = 8):
+    """b * y mod p for b < 2^bits, y < p — ``bits`` conditional rotations
+    (x * 2^j mod p is a j-rotation of the 31-bit word).  bits=8 is the
+    per-byte form; the Pallas kernel uses bits=31 for general factors."""
     acc = jnp.zeros_like(y)
-    for j in range(8):
+    for j in range(bits):
         bit = (b >> j) & 1
         term = _rot31(y, j)
         acc = _addmod(acc, jnp.where(bit.astype(bool), term, 0))
     return acc
+
+
+def _byte_mulmod(b, y):
+    """b * y mod p for b in [0,256), y < p — 8 conditional rotations."""
+    return _mulmod(b, y, 8)
 
 
 def _addmod(a, b):
@@ -86,16 +100,32 @@ def _rotk(x, k: int):
     return _rot31(x, k)
 
 
-@functools.partial(jax.jit, static_argnames=("max_chunks",))
+@functools.partial(jax.jit, static_argnames=("max_chunks", "fp_impl"))
 def chunk_fingerprints(
-    data: jax.Array, bounds: jax.Array, count: jax.Array, *, max_chunks: int
+    data: jax.Array,
+    bounds: jax.Array,
+    count: jax.Array,
+    *,
+    max_chunks: int,
+    fp_impl: FpImpl = "reference",
 ) -> tuple[jax.Array, jax.Array]:
     """Per-chunk (fp (max_chunks, 2) uint32, lengths (max_chunks,) int32).
 
     ``bounds`` are exclusive chunk ends, sorted, sentinel-padded past
     ``count`` (the layout produced by core.seqcdc / core.chunker).
     Entries past ``count`` have fp = 0 and length = 0.
+
+    ``fp_impl="pallas"`` dispatches to the fused kernel
+    (kernels/fingerprint.py, interpret mode auto-selected on CPU) —
+    bit-identical output, no per-byte gather/scatter.
     """
+    if fp_impl == "pallas":
+        from repro.kernels import ops  # lazy: no cycle (see ops docstring)
+
+        return ops.chunk_fingerprints(data, bounds, count,
+                                      max_chunks=max_chunks)
+    if fp_impl != "reference":
+        raise ValueError(f"unknown fp_impl {fp_impl!r}")
     n = data.shape[-1]
     d = data.astype(jnp.uint32)
     idx = jnp.arange(n, dtype=jnp.int32)

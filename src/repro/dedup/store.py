@@ -83,6 +83,14 @@ class BlockStore:
             self.logical_bytes += (refs - have) * size
         self.refs[key] = refs
 
+    def put_blocks(self, chunks: Iterable[bytes]) -> list[str]:
+        """Batched put, the writer hot-path surface: in-process stores just
+        loop, while a remote store (``service/transport/client.py``)
+        overrides this into one RPC per batch — which is why the sharded
+        flush coalesces each shard's chunks instead of calling ``put``
+        per chunk."""
+        return [self.put(c) for c in chunks]
+
     def put_stream(self, data, bounds: Iterable[int]) -> list[str]:
         """Chunk-and-store a byte stream given exclusive boundary offsets."""
         data = np.asarray(data, dtype=np.uint8)

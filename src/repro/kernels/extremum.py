@@ -2,10 +2,11 @@
 
 VectorCDC accelerates RAM/AE by vectorizing their two phases, *extreme byte
 search* and *range scan*.  On TPU the range scan maps to per-block maxima
-computed at HBM bandwidth; the hashless automatons (core/baselines/ae.py,
-ram.py) then skip whole blocks whose max cannot beat the running extreme and
-only descend into candidate blocks — the same wide-compare/first-hit pattern
-as VectorCDC's movemask+ffs, expressed as block max + masked argmin.
+computed at HBM bandwidth; the hashless automatons (the AE/RAM chunkers in
+core/baselines/hashless.py) then skip whole blocks whose max cannot beat
+the running extreme and only descend into candidate blocks — the same
+wide-compare/first-hit pattern as VectorCDC's movemask+ffs, expressed as
+block max + masked argmin.
 """
 from __future__ import annotations
 

@@ -45,3 +45,17 @@ def flash_attention(q, k, v, **kw):
     from . import flash_attn as _fa
 
     return _fa.flash_attention_pallas(q, k, v, interpret=_interpret(), **kw)
+
+
+def chunk_fingerprints(data, bounds, count, *, max_chunks: int):
+    """Fused per-chunk 62-bit fingerprints via the Pallas kernel.
+
+    (Imported lazily: kernels/fingerprint.py pulls constants from
+    repro.dedup.fingerprint, which in turn dispatches back here only
+    inside function bodies — no import cycle.)
+    """
+    from . import fingerprint as _fp
+
+    return _fp.fingerprint_pallas(
+        data, bounds, count, max_chunks=max_chunks, interpret=_interpret()
+    )

@@ -111,6 +111,22 @@ def flash_attention(q, k, v, scale: float | None = None, causal: bool = True):
 
 
 # ---------------------------------------------------------------------------
+# Chunk fingerprints (paper SSII chunk hashing; dedup hot path).
+# ---------------------------------------------------------------------------
+
+
+def chunk_fingerprints(data, bounds, count, *, max_chunks: int):
+    """Oracle for kernels/fingerprint.py: the jnp searchsorted/gather/
+    segment_sum chain in dedup/fingerprint.py (``fp_impl="reference"``).
+    ``fingerprints_numpy`` there is the host-side ground truth for both.
+    """
+    from repro.dedup.fingerprint import chunk_fingerprints as _cf
+
+    return _cf(data, bounds, count, max_chunks=max_chunks,
+               fp_impl="reference")
+
+
+# ---------------------------------------------------------------------------
 # Block maxima (VectorCDC / RAM-AE range-scan substrate).
 # ---------------------------------------------------------------------------
 

@@ -28,6 +28,7 @@ _EXPORTS = {
     "RecipeTable": ".objects",
     "ChunkResult": ".scheduler",
     "ChunkScheduler": ".scheduler",
+    "FingerprintDivergenceError": ".scheduler",
     "MaskDivergenceError": ".scheduler",
     "SchedulerStats": ".scheduler",
     "ShardedDedupService": ".sharded",

@@ -202,15 +202,20 @@ class DedupService(ServiceBase):
         recipes: Optional[RecipeTable] = None,
         mask_impl: str = "jnp",
         step_impl: str = "wide",
+        fp_impl: str = "reference",
         with_fingerprints: bool = True,
+        cross_check_masks: bool = False,
+        cross_check_fps: bool = False,
     ):
         self.params = params or derived_params(avg_chunk)
         self.store = store if store is not None else BlockStore()
         self.recipes = recipes if recipes is not None else RecipeTable()
         self.scheduler = ChunkScheduler(
             self.params, slots=slots, min_bucket=min_bucket,
-            mask_impl=mask_impl, step_impl=step_impl,
+            mask_impl=mask_impl, step_impl=step_impl, fp_impl=fp_impl,
             with_fingerprints=with_fingerprints,
+            cross_check_masks=cross_check_masks,
+            cross_check_fps=cross_check_fps,
         )
         # ingest-cumulative: tracks every chunk ever ingested (the estimator
         # semantics); deletes/overwrites do not shrink it, unlike the exact

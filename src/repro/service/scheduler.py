@@ -24,6 +24,12 @@ chunk start with a full in-bounds window and re-chunks only the final
 device pipeline by the tier-1 equivalence suite).  Result: boundaries (and
 fingerprints) bit-identical to per-stream ``boundaries_two_phase``, at
 device-batch throughput.
+
+Both device stages have selectable backends (docs/KERNELS.md):
+``mask_impl`` for the phase-1 bitmaps and ``fp_impl`` for chunk hashing
+(the fused Pallas fingerprint kernel vs the gather/segment_sum reference),
+each guarded by a first-dispatch bit-identity cross-check
+(``cross_check_masks`` / ``cross_check_fps``).
 """
 from __future__ import annotations
 
@@ -39,13 +45,19 @@ from repro.core import oracle
 from repro.core.automaton import max_chunks_for
 from repro.core.params import SeqCDCParams
 from repro.core.seqcdc import MaskImpl, StepImpl, boundaries_batch
-from repro.dedup.fingerprint import MAX_CHUNK, chunk_fingerprints, fingerprints_numpy
+from repro.dedup.fingerprint import (
+    MAX_CHUNK,
+    FpImpl,
+    chunk_fingerprints,
+    fingerprints_numpy,
+)
 
 
 @functools.partial(
-    jax.jit, static_argnames=("p", "mc", "mask_impl", "step_impl", "with_fp")
+    jax.jit,
+    static_argnames=("p", "mc", "mask_impl", "step_impl", "with_fp", "fp_impl"),
 )
-def _device_chunk(x, *, p, mc, mask_impl, step_impl, with_fp):
+def _device_chunk(x, *, p, mc, mask_impl, step_impl, with_fp, fp_impl):
     """(B, S) uint8 -> (bounds, counts[, fps, lens]).  One module-level jit
     (not a per-scheduler closure) so the compile cache is shared: a device
     shape compiles once per process, not once per service instance.
@@ -56,13 +68,18 @@ def _device_chunk(x, *, p, mc, mask_impl, step_impl, with_fp):
     if not with_fp:
         return bounds, counts, None, None
     fps, lens = jax.vmap(
-        lambda d, b, c: chunk_fingerprints(d, b, c, max_chunks=mc)
+        lambda d, b, c: chunk_fingerprints(d, b, c, max_chunks=mc,
+                                           fp_impl=fp_impl)
     )(x, bounds, counts)
     return bounds, counts, fps, lens
 
 
 class MaskDivergenceError(AssertionError):
     """The Pallas and lax mask kernels disagreed on a dispatched batch."""
+
+
+class FingerprintDivergenceError(AssertionError):
+    """The Pallas and reference fingerprint paths disagreed on a batch."""
 
 
 @dataclasses.dataclass
@@ -113,8 +130,10 @@ class ChunkScheduler:
         max_batch_bytes: int = 8 << 20,
         mask_impl: MaskImpl = "jnp",
         step_impl: StepImpl = "wide",
+        fp_impl: FpImpl = "reference",
         with_fingerprints: bool = True,
         cross_check_masks: bool = False,
+        cross_check_fps: bool = False,
     ):
         from repro.core.params import derived_params
 
@@ -129,6 +148,7 @@ class ChunkScheduler:
         self.min_bucket = max(min_bucket, self.params.max_size)
         self.mask_impl = mask_impl
         self.step_impl = step_impl
+        self.fp_impl = fp_impl
         self.with_fingerprints = with_fingerprints
         # bit-identity guard for the Pallas hot path: the first dispatch of
         # every device shape is replayed through the other mask backend and
@@ -138,6 +158,12 @@ class ChunkScheduler:
         # ratio, the nastiest possible failure mode).
         self.cross_check_masks = cross_check_masks
         self._checked_buckets: set[int] = set()
+        # the fingerprint twin: first dispatch per bucket replays the other
+        # fp_impl and compares bit-for-bit (FingerprintDivergenceError) — a
+        # silently wrong fingerprint would mis-route chunks across shards
+        # and poison the estimator index, so it gets the same guard
+        self.cross_check_fps = cross_check_fps
+        self._fp_checked_buckets: set[int] = set()
         self.stats = SchedulerStats()
         self._pending: Dict[int, List[ChunkRequest]] = {}
         self._ready: List[tuple[int, ChunkResult]] = []
@@ -209,6 +235,7 @@ class ChunkScheduler:
                 mask_impl=self.mask_impl,
                 step_impl=self.step_impl,
                 with_fp=self.with_fingerprints,
+                fp_impl=self.fp_impl,
             )
             self._jit_cache[bucket] = fn
         return fn
@@ -228,6 +255,9 @@ class ChunkScheduler:
             self._cross_check(bucket, batch, bounds, counts)
         if fps is not None:
             fps, lens = np.asarray(fps), np.asarray(lens)
+            if self.cross_check_fps and bucket not in self._fp_checked_buckets:
+                self._fp_checked_buckets.add(bucket)
+                self._cross_check_fp(bucket, batch, bounds, counts, fps, lens)
         self.stats.dispatches += 1
         self.stats.device_bytes += batch.size
         self.stats.padded_rows += rows - len(reqs)
@@ -257,6 +287,28 @@ class ChunkScheduler:
                 f"mask_impl={self.mask_impl!r} and {other!r} diverged on "
                 f"bucket {bucket} (rows {rows}): the Pallas phase-1 kernel "
                 f"no longer matches the lax reference bit-for-bit"
+            )
+
+    def _cross_check_fp(self, bucket: int, batch: np.ndarray,
+                        bounds: np.ndarray, counts: np.ndarray,
+                        fps: np.ndarray, lens: np.ndarray):
+        """Replay one batch's fingerprints through the other fp backend;
+        raise on any differing bit (the ``_cross_check`` twin for fps)."""
+        other = "reference" if self.fp_impl == "pallas" else "pallas"
+        mc = max_chunks_for(bucket, self.params)
+        f2, l2 = jax.vmap(
+            lambda d, b, c: chunk_fingerprints(d, b, c, max_chunks=mc,
+                                               fp_impl=other)
+        )(jnp.asarray(batch), jnp.asarray(bounds), jnp.asarray(counts))
+        f2, l2 = np.asarray(f2), np.asarray(l2)
+        if not (np.array_equal(fps, f2) and np.array_equal(lens, l2)):
+            rows = np.nonzero(
+                (fps != f2).any(axis=(-2, -1)) | (lens != l2).any(axis=-1)
+            )[0].tolist()
+            raise FingerprintDivergenceError(
+                f"fp_impl={self.fp_impl!r} and {other!r} diverged on bucket "
+                f"{bucket} (rows {rows}): the Pallas fingerprint kernel no "
+                f"longer matches the gather-chain reference bit-for-bit"
             )
 
     def _exactify(self, req: ChunkRequest, padded: np.ndarray,

@@ -97,7 +97,9 @@ class ShardedDedupService(ServiceBase):
         recipes: Optional[RecipeTable] = None,
         mask_impl: str = "jnp",
         step_impl: str = "wide",
+        fp_impl: str = "reference",
         cross_check_masks: bool = False,
+        cross_check_fps: bool = False,
         async_flush: bool = True,
         max_pending: int = 256,
         mesh=None,
@@ -132,8 +134,9 @@ class ShardedDedupService(ServiceBase):
         # fingerprints are mandatory: they are the routing key
         self.scheduler = ChunkScheduler(
             self.params, slots=slots, min_bucket=min_bucket,
-            mask_impl=mask_impl, step_impl=step_impl,
+            mask_impl=mask_impl, step_impl=step_impl, fp_impl=fp_impl,
             with_fingerprints=True, cross_check_masks=cross_check_masks,
+            cross_check_fps=cross_check_fps,
         )
         # validate the mesh before anything spawns threads: a constructor
         # that raises must not leak per-shard writer workers
@@ -247,14 +250,26 @@ class ShardedDedupService(ServiceBase):
         finally:
             self._in_flight.clear()
         staged = []  # (result, owners, keys)
+        # coalesce each shard's puts: the writer seam accepts batches
+        # (``put_blocks``), so a flush submits one task per shard —
+        # one RPC on the remote transport where the old path paid one
+        # round trip per chunk — split only at ``put_batch_bytes`` so an
+        # arbitrarily large flush cannot buffer unbounded chunk bytes
+        # in a single frame
+        batches: dict[int, list] = {}  # shard -> [(keys, i, chunk view)]
         for res in results:
             owners = self._owners_for(res)
             keys: List[Optional[str]] = [None] * len(owners)
             s = 0
             for i, e in enumerate(res.bounds.tolist()):
-                self._enqueue_put(owners[i], keys, i, res.data[s:e])
+                batches.setdefault(int(owners[i]), []).append(
+                    (keys, i, res.data[s:e])
+                )
                 s = e
             staged.append((res, owners, keys))
+        for shard, items in batches.items():
+            for group in self._split_batches(items):
+                self.writers.submit(shard, self._put_blocks_task(shard, group))
         self.writers.barrier()  # blocks are durable past this point
 
         out = []
@@ -287,14 +302,35 @@ class ShardedDedupService(ServiceBase):
             self.sync()
         return out
 
-    def _enqueue_put(self, owner: int, keys: List[Optional[str]], i: int,
-                     chunk: np.ndarray):
+    #: max chunk payload per coalesced ``put_blocks`` call: a typical flush
+    #: is one batch per shard; a huge one splits so neither the writer task
+    #: nor a remote frame materializes unbounded bytes at once
+    put_batch_bytes = 16 << 20
+
+    def _split_batches(self, items: list) -> list:
+        """Split one shard's (keys, i, chunk) puts at ``put_batch_bytes``."""
+        groups, cur, size = [], [], 0
+        for it in items:
+            cur.append(it)
+            size += it[2].size
+            if size >= self.put_batch_bytes:
+                groups.append(cur)
+                cur, size = [], 0
+        if cur:
+            groups.append(cur)
+        return groups
+
+    def _put_blocks_task(self, owner: int, items: list):
+        """One coalesced batched put on the owner's writer thread; the
+        returned keys are scattered back into each recipe's key slots."""
         store = self.stores[owner]
 
         def task():
-            keys[i] = store.put(chunk.tobytes())
+            got = store.put_blocks([c.tobytes() for _, _, c in items])
+            for (keys, i, _), key in zip(items, got):
+                keys[i] = key
 
-        self.writers.submit(owner, task)
+        return task
 
     def _release_task(self, shard: int, keys: List[str]):
         store = self.stores[shard]

@@ -243,18 +243,18 @@ def test_sigkill_during_block_write_aborts_cleanly(tmp_path, rng):
     svc.put("keep", keep)
 
     victim = svc._servers[1]
-    orig_put = svc.stores[1].put
+    orig_put = svc.stores[1].put_blocks  # the coalesced writer hot path
 
-    def killing_put(chunk):
+    def killing_put(chunks):
         victim.kill()  # SIGKILL, mid-flush: blocks for shard 0 may have landed
-        return orig_put(chunk)
+        return orig_put(chunks)
 
-    svc.stores[1].put = killing_put
+    svc.stores[1].put_blocks = killing_put
     svc.submit("lost", rng.integers(0, 256, 8000, dtype=np.uint8))
     with pytest.raises(AsyncWriteError):
         svc.flush()
     assert svc.names() == ["keep"]  # nothing committed
-    svc.stores[1].put = orig_put
+    svc.stores[1].put_blocks = orig_put
     svc.close()
 
     svc2 = ShardedDedupService.open(root, 2, transport="remote",
