@@ -11,6 +11,12 @@ searchsorted/gather/segment_sum chain (``fp_impl="reference"``) against the
 fused Pallas fingerprint kernel (``fp_impl="pallas"``, docs/KERNELS.md) —
 and records the speedup, the number the follow-up vector-chunking paper
 says dominates once boundary detection is fast.
+
+Finally it times the whole chunk+hash pipeline end to end both ways:
+the composed split path (masks -> boundary scan -> fingerprints, three
+dispatches) against the single-dispatch fused pipeline kernel
+(``pipeline_impl="fused"``, kernels/fused_pipeline.py) — the fusion the
+source paper's one-pass argument is about.
 """
 from __future__ import annotations
 
@@ -57,6 +63,39 @@ def _fingerprint_rows(budget: str, mb: int) -> list:
     return rows
 
 
+def _pipeline_rows(budget: str, mb: int) -> list:
+    """pipeline_impl="split" vs "fused": end-to-end chunk+hash, one stream."""
+    from repro.kernels import ops as kernel_ops
+
+    p = derived_params(8192)
+    n = mb << 20
+    data = jnp.asarray(random_data(mb, seed=6))
+    mc = max_chunks_for(n, p)
+
+    def split(d):
+        bounds, count = boundaries_two_phase(d, p, max_chunks=mc)
+        return chunk_fingerprints(d, bounds, count, max_chunks=mc)
+
+    impls = {
+        "split": jax.jit(split),
+        "fused": jax.jit(
+            lambda d: kernel_ops.fused_pipeline(d, p, max_chunks=mc)
+        ),
+    }
+    rows = []
+    gbps = {}
+    for impl, fn in impls.items():
+        res = time_throughput(
+            lambda: jax.block_until_ready(fn(data)), n
+        )
+        gbps[impl] = res["gbps"]
+        rows.append({"figure": "fused-pipeline", "budget": budget,
+                     "pipeline_impl": impl, "stream_mb": mb,
+                     "gbits_per_s": res["gbps"]})
+    rows[-1]["speedup_vs_split"] = gbps["fused"] / gbps["split"]
+    return rows
+
+
 def run(budget: str = "small"):
     mb = {"quick": 2, "small": 8}.get(budget, 32)
     n = mb << 20
@@ -89,6 +128,7 @@ def run(budget: str = "small"):
         rows.append({"figure": "sec5-intrinsics", "primitive": f"automaton-{impl}",
                      "gbits_per_s": res["gbps"], "block_w": p.block_width})
     rows.extend(_fingerprint_rows(budget, mb))
+    rows.extend(_pipeline_rows(budget, mb))
     emit(rows, "VPU-primitive microbench (paper SSV analogue)")
     return rows
 

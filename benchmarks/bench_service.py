@@ -28,6 +28,7 @@ from . import common
 MASK_IMPL = "jnp"
 STEP_IMPL = "wide"
 FP_IMPL = "reference"
+PIPELINE_IMPL = "split"  # pinned: rows must not drift with REPRO_PIPELINE_IMPL
 
 
 def _raw_chunking_gbps(corpus: np.ndarray, params, seg: int = 1 << 20,
@@ -66,7 +67,7 @@ def run(budget: str = "small") -> None:
         for _ in range(2):
             svc = DedupService(params=params, slots=8, with_fingerprints=with_fp,
                                mask_impl=MASK_IMPL, step_impl=STEP_IMPL,
-                               fp_impl=FP_IMPL)
+                               fp_impl=FP_IMPL, pipeline_impl=PIPELINE_IMPL)
             t0 = time.perf_counter()
             for i, v in enumerate(versions):
                 svc.submit(f"v{i:03d}", v)
@@ -85,6 +86,7 @@ def run(budget: str = "small") -> None:
             "mask_impl": MASK_IMPL,
             "step_impl": STEP_IMPL,
             "fp_impl": FP_IMPL,
+            "pipeline_impl": PIPELINE_IMPL,
             "fingerprints": int(with_fp),
             "corpus_mb": total / common.MiB,
             "versions": len(versions),

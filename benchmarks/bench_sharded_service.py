@@ -31,6 +31,7 @@ from . import common
 MASK_IMPL = "jnp"
 STEP_IMPL = "wide"
 FP_IMPL = "reference"
+PIPELINE_IMPL = "split"  # pinned: rows must not drift with REPRO_PIPELINE_IMPL
 
 
 def _cell(versions, total: int, shards: int, async_flush: bool,
@@ -40,7 +41,8 @@ def _cell(versions, total: int, shards: int, async_flush: bool,
     for it in range(2):
         svc = ShardedDedupService(shards, params=params, slots=8,
                                   mask_impl=MASK_IMPL, step_impl=STEP_IMPL,
-                                  fp_impl=FP_IMPL, async_flush=async_flush)
+                                  fp_impl=FP_IMPL, pipeline_impl=PIPELINE_IMPL,
+                                  async_flush=async_flush)
         t0 = time.perf_counter()
         for i, v in enumerate(versions):
             svc.submit(f"v{i:03d}", v)
@@ -66,6 +68,7 @@ def _cell(versions, total: int, shards: int, async_flush: bool,
         "mask_impl": MASK_IMPL,
         "step_impl": STEP_IMPL,
         "fp_impl": FP_IMPL,
+        "pipeline_impl": PIPELINE_IMPL,
         "corpus_mb": total / common.MiB,
         "ingest_gbps": total / ingest_s / 1e9,
         "restore_gbps": total / restore_s / 1e9,

@@ -40,7 +40,8 @@ MODULES = [
 #: budget, covering the service/scheduler trajectory (what PR-over-PR
 #: comparisons track) without the paper-figure sweeps; bench_intrinsics
 #: rides along for its fingerprint-kernel speedup rows (fp_impl
-#: "reference" vs "pallas")
+#: "reference" vs "pallas") and the end-to-end fused-pipeline rows
+#: (pipeline_impl "split" vs "fused")
 QUICK_MODULES = [
     "bench_service",
     "bench_sharded_service",
@@ -50,7 +51,7 @@ QUICK_MODULES = [
 
 #: configuration every benchmark uses unless its rows say otherwise
 DEFAULTS = {"mask_impl": "jnp", "step_impl": "wide", "fp_impl": "reference",
-            "shards": 1, "transport": "local"}
+            "pipeline_impl": "split", "shards": 1, "transport": "local"}
 
 
 def main() -> None:

@@ -1,6 +1,8 @@
-"""Dev sanity: all SeqCDC implementations agree with the slow oracle, and
-the fused Pallas fingerprint kernel (CPU interpret mode) is bit-identical
-to the numpy reference over the same case sweep."""
+"""Dev sanity: all SeqCDC implementations agree with the slow oracle, the
+fused Pallas fingerprint kernel (CPU interpret mode) is bit-identical to
+the numpy reference over the same case sweep, and the fused single-dispatch
+chunk+fingerprint pipeline kernel is bit-identical to the composed split
+path (pipeline_impl="fused" vs "split") over the same cases."""
 import os
 import sys
 
@@ -72,6 +74,26 @@ for i, d in enumerate(cases):
     if not np.array_equal(np.asarray(fp)[: int(c)], want):
         print(f"[fp-pallas] case{i} n={d.size}: kernel != numpy reference")
         fail += 1
+
+# fused pipeline parity: the single-dispatch chunk+fingerprint kernel
+# (pipeline_impl="fused", CPU interpret) must match the composed split
+# path bit-for-bit — bounds, counts, fps, and lengths
+from repro.kernels import ops as kernel_ops
+from repro.kernels import ref as kernel_ref
+
+for params in [small, paper_params(8192)]:
+    for i, d in enumerate(cases):
+        if d.size == 0:
+            continue
+        mc = max_chunks_for(d.size, params)
+        x = jnp.asarray(d)[None]
+        want = kernel_ref.fused_pipeline(x, params, max_chunks=mc)
+        got = kernel_ops.fused_pipeline(x, params, max_chunks=mc)
+        for w, g, part in zip(want, got, ("bounds", "counts", "fps", "lens")):
+            if not np.array_equal(np.asarray(w), np.asarray(g)):
+                print(f"[fused-pipeline] params={params.avg_size} case{i} "
+                      f"n={d.size}: {part} != split reference")
+                fail += 1
 
 print("FAILURES:", fail)
 sys.exit(1 if fail else 0)

@@ -31,10 +31,14 @@ from typing import Literal
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from .params import SeqCDCParams
 
-_BIG = jnp.int32(1 << 30)
+# np scalar, not jnp: it traces as a jaxpr literal, which lets the fused
+# Pallas pipeline kernel (kernels/fused_pipeline.py) reuse _resolve in its
+# kernel body without capturing a device constant
+_BIG = np.int32(1 << 30)
 
 
 def max_chunks_for(n: int, p: SeqCDCParams) -> int:

@@ -1,0 +1,385 @@
+"""Pallas TPU kernel: fused single-dispatch SeqCDC chunk+fingerprint pipeline.
+
+The split pipeline the scheduler composes (``pipeline_impl="split"``) runs
+three dispatches per padded bucket: the phase-1 extremum-mask kernel, the
+phase-2 boundary-selection scan, and the fingerprint kernel — the last of
+which re-reads every byte the mask pass already touched.  SeqCDC's
+throughput argument (and the follow-up AVX vector-chunking paper) is that
+boundary detection and hashing should share one pass over the data; this
+kernel is that fusion: per (row, tile) grid step the TILE-byte VMEM block
+is read **once** and feeds
+
+1. the mask comparison lanes — shifted pairwise compares over the tile plus
+   an (L-1)-byte halo, AND-reduced into the candidate bitmap, one opposite
+   compare for the opposing bitmap (identical decisions to
+   ``core/masks.py`` / ``kernels/seqcdc_masks.py``);
+2. the limb-accumulating hash state — per-byte weights against a *fixed*
+   per-lane ``r^-q`` vector (8 conditional 31-bit rotations, no per-byte
+   gather), 16-bit-limb cumulative sums exact for ``tile + halo <= 65536``;
+3. the boundary automaton — a ``fori_loop`` over the tile's W-byte blocks
+   running the exact ``_scan_wide`` step (it calls
+   ``core/automaton._resolve`` itself), with the scan state carried across
+   tiles in VMEM scratch (the grid iterates row-major, tiles innermost,
+   like the flash-attention kernel's kv state).
+
+Boundary decisions are consumed *in-kernel* to segment the hash reduction:
+the moment a block emits a chunk end ``e``, the fingerprint of ``[s, e)``
+is read off the running prefix state —
+
+    h_r(chunk) = (P_r(e) - P_r(s)) * r^(e-1)  mod p,
+    P_r(i)     = sum_{j<i} b_j * r^-j          (prefix of position-weighted
+                                                bytes; negative exponents via
+                                                the Fermat inverse, p prime)
+
+— two scalar prefix reads, one factor gather, three 31-rotation mulmods.
+``P_r(s)`` was latched when the previous boundary was emitted, and the
+cross-tile carry ``P_r(t0)`` lives in scratch, so chunks spanning any
+number of tiles cost the same as local ones.  The final file-end boundary
+fixup of ``select_boundaries`` is replicated in-kernel at the last tile
+(``r^(n-1)`` arrives as a host-precomputed operand).
+
+Output is bit-identical to the composed split path — bounds/count from
+``boundaries_batch(step_impl="wide")`` and fps/lengths from
+``chunk_fingerprints`` — which tests/test_fused_pipeline.py, the
+differential matrix harness (tests/test_pipeline_matrix.py), and the
+scheduler's first-dispatch ``PipelineDivergenceError`` cross-check
+(docs/KERNELS.md) all enforce.
+
+Constraints: TILE a multiple of 1024 (whole (8,128) VPU tiles) with
+``TILE + halo <= 65536`` where ``halo = skip_size + seq_length - 1``
+(the limb-sum exactness bound; the halo is that wide because an
+overshooting skip resolved as a cut can emit a bound ``skip_size + L - 1``
+bytes past its block — hence the 32 KiB default, half the fingerprint
+kernel's); chunk lengths <= ``MAX_CHUNK`` = 65536 (the power-table bound,
+as everywhere); streams < 2 GiB (int32 positions).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from repro.core.automaton import _BIG, _resolve
+from repro.core.params import SeqCDCParams
+from repro.dedup.fingerprint import (
+    MAX_CHUNK,
+    P31,
+    R1,
+    R2,
+    _addmod,
+    _byte_mulmod,
+    _fold32,
+    _mulmod,
+    _pow_table_np,
+    _rot31,
+)
+
+#: selects the scheduler's device pipeline: three dispatches ("split" —
+#: masks, boundary scan, fingerprints) or this kernel ("fused")
+PipelineImpl = Literal["split", "fused"]
+
+DEFAULT_TILE = 32 * 1024  # + halo stays under the 65536 limb-exactness bound
+
+
+@functools.lru_cache(maxsize=None)
+def _negpow_table_np(r: int, size: int) -> np.ndarray:
+    """w[q] = r^-q mod p — the fixed per-lane prefix weight vector."""
+    p = (1 << 31) - 1
+    inv = pow(r, p - 2, p)  # Fermat: p is prime
+    out = np.empty(size, dtype=np.uint32)
+    acc = 1
+    for q in range(size):
+        out[q] = acc
+        acc = (acc * inv) % p
+    return out
+
+
+def _mulmod31(a, y):
+    """a * y mod p for a, y < p — 31 conditional rotations (scalar use)."""
+    return _mulmod(a, y, 31)
+
+
+def _pipeline_kernel(
+    t0_ref, x_ref, halo_ref, rneg_ref, rpos_ref, wneg_ref, postab_ref,
+    rnm1_ref, bounds_ref, counts_ref, fps_ref, lens_ref, sti_ref, sth_ref,
+    *, p: SeqCDCParams, n: int, mc: int, tile: int, halo: int,
+    nb_split: int, last_t0: int,
+):
+    t0 = t0_ref[0, 0]  # tile start offset in the (padded) stream
+    L = p.seq_length
+    W = p.block_width
+    nb = tile // W
+    T = jnp.int32(p.skip_trigger)
+    ext_len = tile + halo
+
+    @pl.when(t0 == 0)  # first tile of a row: reset state and outputs
+    def _init():
+        sti_ref[...] = jnp.zeros_like(sti_ref)  # k, c, s, cnt
+        sti_ref[0] = np.int32(p.sub_min_skip)
+        sth_ref[...] = jnp.zeros_like(sth_ref)  # P(t0) carry, P(s) latch
+        bounds_ref[...] = jnp.full_like(bounds_ref, _BIG)
+        counts_ref[...] = jnp.zeros_like(counts_ref)
+        fps_ref[...] = jnp.zeros_like(fps_ref)
+        lens_ref[...] = jnp.zeros_like(lens_ref)
+
+    # -- the one byte read: tile + (L-1)-byte halo from the next tile -------
+    x = x_ref[0]  # (tile,) uint8
+    ext = jnp.concatenate([x, halo_ref[0, 0]])  # (tile + halo,)
+
+    # -- mask lanes (phase 1, same decisions as core/masks.py) --------------
+    a = ext[:-1]
+    b = ext[1:]
+    gt = b > a  # (tile + halo - 1,) pair bits
+    lt = b < a
+    inc = p.mode == "increasing"
+    fwd = gt if inc else lt
+    acc = fwd[:tile]
+    for j in range(1, L - 1):  # AND of L-1 shifted pair masks
+        acc = jnp.logical_and(acc, fwd[j:j + tile])
+    pos = t0 + jnp.arange(tile, dtype=jnp.int32)
+    cand = acc & (pos <= n - L)  # the reference wrapper's tail masking
+    opp = (lt if inc else gt)[:tile] & (pos < n - 1)
+
+    # -- hash lanes: position-weighted limb prefix sums ---------------------
+    xw = ext.astype(jnp.uint32)
+    lo, hi = [], []
+    for g in range(2):
+        w = _byte_mulmod(xw, wneg_ref[g])  # b_q * r^-q, fixed weight vector
+        lo.append(jnp.cumsum(w & 0xFFFF, dtype=jnp.uint32))  # exact:
+        hi.append(jnp.cumsum(w >> 16, dtype=jnp.uint32))  # ext_len <= 2^16
+    rneg = rneg_ref[0]  # (2,) r^-t0
+    rpos = rpos_ref[0]  # (2,) r^t0
+    carry0 = sth_ref[0, 0]  # P(t0) per generator
+    carry1 = sth_ref[0, 1]
+
+    def tile_prefix(g, m):
+        """P within this tile: sum of the first ``m`` ext weights, mod p."""
+        i = jnp.maximum(m - 1, 0)
+        part = _addmod(_fold32(lo[g][i]), _rot31(_fold32(hi[g][i]), 16))
+        return jnp.where(m > 0, part, jnp.uint32(0))
+
+    def prefix_at(g, carry_g, e):
+        """P(e) for a stream position ``e`` inside [t0, t0 + ext_len]."""
+        m = jnp.clip(e - t0, 0, ext_len)
+        return _addmod(carry_g, _mulmod31(rneg[g], tile_prefix(g, m)))
+
+    def chunk_fp(g, carry_g, ps_g, e):
+        """(P(e) - P(s)) * r^(e-1): the fingerprint of the closing chunk."""
+        pe = prefix_at(g, carry_g, e)
+        diff = _addmod(pe, P31 - ps_g)  # canonical: both operands < p
+        fi = jnp.clip(e - 1 - t0, 0, ext_len - 1)
+        rfac = _mulmod31(rpos[g], postab_ref[g, fi])
+        # a bound behind this tile is only ever the file-end cut (the scan
+        # position can overshoot cut_k = n - L + 1 when the tail is shorter
+        # than a skip landing); its factor r^(n-1) is the host operand —
+        # prefix_at is already exact there, P(t0) == P(n) past the data
+        rfac = jnp.where(e - 1 - t0 < 0, rnm1_ref[0, g], rfac)
+        return pe, _mulmod31(diff, rfac)
+
+    # -- boundary automaton: the exact _scan_wide step per W-block ----------
+    iota = jnp.arange(W, dtype=jnp.int32)
+    k0, c0, s0, cnt0 = sti_ref[0], sti_ref[1], sti_ref[2], sti_ref[3]
+    ps0 = sth_ref[1, 0], sth_ref[1, 1]
+
+    def body(j, st):
+        k, c, s, cnt, ps_0, ps_1 = st
+        bstart = t0 + j * W
+        bend = bstart + W
+        # blocks past the split path's padded bitmap simply don't exist
+        # there; masking in_block reproduces that exactly
+        in_block = (k < bend) & (s < n) & (t0 // W + j < nb_split)
+        cb = jax.lax.dynamic_slice(cand, (j * W,), (W,))
+        ob = jax.lax.dynamic_slice(opp, (j * W,), (W,))
+        o = jnp.maximum(k - bstart, 0)
+        active = iota >= o
+        posw = bstart + iota
+        kc = jnp.min(jnp.where(cb & active, posw, _BIG))
+        cum = c + jnp.cumsum((ob & active).astype(jnp.int32))
+        kt = jnp.min(jnp.where(ob & active & (cum > T), posw, _BIG))
+        new_k, new_s, emit, bound, any_event = _resolve(
+            k, c, s, kc, kt, bend, in_block, n, p
+        )
+        new_c = jnp.where(any_event, 0, jnp.where(in_block, cum[-1], c))
+        # boundary decision consumed in-kernel: segment the hash reduction
+        pe0, fp0 = chunk_fp(0, carry0, ps_0, bound)
+        pe1, fp1 = chunk_fp(1, carry1, ps_1, bound)
+        idx = jnp.minimum(cnt, mc - 1)
+        keep = emit & (cnt < mc)  # the split path's mode="drop" scatter
+        bounds_ref[0, idx] = jnp.where(keep, bound, bounds_ref[0, idx])
+        lens_ref[0, idx] = jnp.where(keep, bound - s, lens_ref[0, idx])
+        fps_ref[0, idx, 0] = jnp.where(keep, fp0, fps_ref[0, idx, 0])
+        fps_ref[0, idx, 1] = jnp.where(keep, fp1, fps_ref[0, idx, 1])
+        return (new_k, new_c, new_s, cnt + emit.astype(jnp.int32),
+                jnp.where(emit, pe0, ps_0), jnp.where(emit, pe1, ps_1))
+
+    k, c, s, cnt, ps_0, ps_1 = jax.lax.fori_loop(
+        0, nb, body, (k0, c0, s0, cnt0, *ps0)
+    )
+
+    # -- final-boundary fixup (select_boundaries' post-scan guarantee) ------
+    last = jnp.where(
+        cnt > 0, bounds_ref[0, jnp.clip(cnt - 1, 0, mc - 1)], 0)
+    need = (t0 == last_t0) & (last < n)  # n > 0: static in this kernel
+    pe0 = prefix_at(0, carry0, jnp.int32(n))  # r^(n-1) is a host operand:
+    fp0 = _mulmod31(_addmod(pe0, P31 - ps_0), rnm1_ref[0, 0])  # n - 1 may
+    pe1 = prefix_at(1, carry1, jnp.int32(n))  # fall outside this tile's
+    fp1 = _mulmod31(_addmod(pe1, P31 - ps_1), rnm1_ref[0, 1])  # factor table
+    idx = jnp.minimum(cnt, mc - 1)
+    keep = need & (cnt < mc)
+    bounds_ref[0, idx] = jnp.where(keep, jnp.int32(n), bounds_ref[0, idx])
+    lens_ref[0, idx] = jnp.where(keep, jnp.int32(n) - s, lens_ref[0, idx])
+    fps_ref[0, idx, 0] = jnp.where(keep, fp0, fps_ref[0, idx, 0])
+    fps_ref[0, idx, 1] = jnp.where(keep, fp1, fps_ref[0, idx, 1])
+    cnt = cnt + need.astype(jnp.int32)
+
+    # -- persist state for the next tile ------------------------------------
+    counts_ref[0, 0] = cnt
+    sti_ref[...] = jnp.stack([k, c, s, cnt])
+    sth_ref[0, 0] = _addmod(carry0, _mulmod31(rneg[0], tile_prefix(0, tile)))
+    sth_ref[0, 1] = _addmod(carry1, _mulmod31(rneg[1], tile_prefix(1, tile)))
+    sth_ref[1, 0] = ps_0
+    sth_ref[1, 1] = ps_1
+
+
+@functools.partial(
+    jax.jit, static_argnames=("p", "max_chunks", "tile", "interpret")
+)
+def fused_pipeline_batch(
+    data: jax.Array,
+    p: SeqCDCParams,
+    *,
+    max_chunks: int,
+    tile: int = DEFAULT_TILE,
+    interpret: bool = True,
+) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Chunk + fingerprint a ``(B, S)`` uint8 batch in one dispatch.
+
+    Returns ``(bounds (B, mc) int32, counts (B,) int32, fps (B, mc, 2)
+    uint32, lengths (B, mc) int32)`` — bit-identical to
+    ``boundaries_batch(..., step_impl="wide")`` composed with the vmapped
+    ``chunk_fingerprints`` (any ``mask_impl``/``fp_impl``: all are
+    bit-identical to each other).
+
+    Precondition: ``max_chunks`` must be a true upper bound on the chunk
+    count (``core.automaton.max_chunks_for`` — what the scheduler always
+    passes).  With an undersized ``max_chunks`` the reference path folds
+    all overflow bytes into the clamped last fp slot while this kernel
+    drops overflow chunks whole, so the two fp tails differ (bounds,
+    counts and lengths still agree).
+    """
+    assert data.ndim == 2, data.shape
+    B, n = data.shape
+    mc = max_chunks
+    if n == 0:  # static: no chunks, matching the split path's empty case
+        return (jnp.full((B, mc), _BIG, jnp.int32),
+                jnp.zeros((B,), jnp.int32),
+                jnp.zeros((B, mc, 2), jnp.uint32),
+                jnp.zeros((B, mc), jnp.int32))
+    if p.max_size > MAX_CHUNK:
+        raise ValueError(
+            f"max_size {p.max_size} exceeds the fingerprint power-table "
+            f"bound {MAX_CHUNK}"
+        )
+    L = p.seq_length
+    W = p.block_width
+    # halo: the mask pair bits spill L-1 bytes past the tile, but emitted
+    # bounds spill further — an overshooting skip resolved as a cut
+    # (_resolve's trig_cuts) lands at cut_b < block_end + skip_size + L - 1,
+    # and the in-kernel prefix/factor reads at that bound must still be
+    # inside the extended byte window
+    halo = p.skip_size + L - 1
+    # the split automaton pads its bitmaps so every event fires in-scan
+    # (core/automaton._padded_blocks); cover exactly those blocks
+    nb_split = (n + p.skip_size + W + W - 1) // W
+    cover = nb_split * W
+    tile = min(tile, (cover + 1023) // 1024 * 1024)
+    assert tile % 1024 == 0 and tile % W == 0, (tile, W)
+    assert tile + halo <= MAX_CHUNK, (tile, halo)  # limb-sum exactness
+    nt = (cover + tile - 1) // tile
+    n_pad = nt * tile
+
+    x = jnp.pad(data.astype(jnp.uint8), ((0, 0), (0, n_pad - n)))
+    # halos[b, i] = x[b, (i+1)*tile : (i+1)*tile + halo], zero past the end
+    # (halo may exceed tile when skip_size does, so slice rather than
+    # reshape; nt is small and static)
+    xh = jnp.pad(x, ((0, 0), (0, halo)))
+    halos = jnp.stack(
+        [xh[:, (i + 1) * tile:(i + 1) * tile + halo] for i in range(nt)],
+        axis=1,
+    )
+    t0s = (jnp.arange(nt, dtype=jnp.int32) * tile).reshape(nt, 1)
+
+    pm = (1 << 31) - 1
+    wneg = jnp.stack(
+        [jnp.asarray(_negpow_table_np(r, tile + halo)) for r in (R1, R2)]
+    )
+    postab = jnp.stack(
+        [jnp.asarray(_pow_table_np(r)[: tile + halo]) for r in (R1, R2)]
+    )
+    rneg = jnp.asarray(np.array(
+        [[pow(pow(r, pm - 2, pm), i * tile, pm) for r in (R1, R2)]
+         for i in range(nt)], dtype=np.uint32))
+    rpos = jnp.asarray(np.array(
+        [[pow(r, i * tile, pm) for r in (R1, R2)] for i in range(nt)],
+        dtype=np.uint32))
+    rnm1 = jnp.asarray(np.array(
+        [[pow(r, n - 1, pm) for r in (R1, R2)]], dtype=np.uint32))
+
+    from jax.experimental.pallas import tpu as pltpu
+
+    bounds, counts, fps, lens = pl.pallas_call(
+        functools.partial(
+            _pipeline_kernel, p=p, n=n, mc=mc, tile=tile, halo=halo,
+            nb_split=nb_split, last_t0=(nt - 1) * tile,
+        ),
+        grid=(B, nt),  # row-major: each row's tiles run in order, so the
+        # scratch scan/hash state threads through them (re-init at t0 == 0)
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda b, i: (i, 0)),  # t0 (operand, not
+            # program_id: the index map owns the grid->tile mapping)
+            pl.BlockSpec((1, tile), lambda b, i: (b, i)),
+            pl.BlockSpec((1, 1, halo), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, 2), lambda b, i: (i, 0)),  # r^-t0
+            pl.BlockSpec((1, 2), lambda b, i: (i, 0)),  # r^t0
+            pl.BlockSpec((2, tile + halo), lambda b, i: (0, 0)),
+            pl.BlockSpec((2, tile + halo), lambda b, i: (0, 0)),
+            pl.BlockSpec((1, 2), lambda b, i: (0, 0)),  # r^(n-1)
+        ],
+        out_specs=[
+            pl.BlockSpec((1, mc), lambda b, i: (b, 0)),
+            pl.BlockSpec((1, 1), lambda b, i: (b, 0)),
+            pl.BlockSpec((1, mc, 2), lambda b, i: (b, 0, 0)),
+            pl.BlockSpec((1, mc), lambda b, i: (b, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, mc), jnp.int32),
+            jax.ShapeDtypeStruct((B, 1), jnp.int32),
+            jax.ShapeDtypeStruct((B, mc, 2), jnp.uint32),
+            jax.ShapeDtypeStruct((B, mc), jnp.int32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((4,), jnp.int32),  # automaton k, c, s, cnt
+            pltpu.VMEM((2, 2), jnp.uint32),  # P(t0) carry, P(s) latch
+        ],
+        interpret=interpret,
+    )(t0s, x, halos, rneg, rpos, wneg, postab, rnm1)
+    return bounds, counts[:, 0], fps, lens
+
+
+def fused_pipeline(
+    data: jax.Array,
+    p: SeqCDCParams,
+    *,
+    max_chunks: int,
+    tile: int = DEFAULT_TILE,
+    interpret: bool = True,
+) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Single-stream convenience: ``(n,)`` -> (bounds, count, fps, lengths)."""
+    b, c, f, ln = fused_pipeline_batch(
+        data[None], p, max_chunks=max_chunks, tile=tile, interpret=interpret
+    )
+    return b[0], c[0], f[0], ln[0]

@@ -59,3 +59,23 @@ def chunk_fingerprints(data, bounds, count, *, max_chunks: int):
     return _fp.fingerprint_pallas(
         data, bounds, count, max_chunks=max_chunks, interpret=_interpret()
     )
+
+
+def fused_pipeline(data, p, *, max_chunks: int):
+    """Single-dispatch chunk+fingerprint pipeline via the fused kernel.
+
+    ``data``: ``(S,)`` or ``(B, S)`` uint8.  Returns
+    ``(bounds, count(s), fps, lengths)`` bit-identical to the composed
+    split path (``boundaries_batch`` + ``chunk_fingerprints``); the
+    service scheduler selects it with ``pipeline_impl="fused"``.
+    (Lazy import for the same no-cycle reason as ``chunk_fingerprints``.)
+    """
+    from . import fused_pipeline as _fpipe
+
+    if data.ndim == 1:
+        return _fpipe.fused_pipeline(
+            data, p, max_chunks=max_chunks, interpret=_interpret()
+        )
+    return _fpipe.fused_pipeline_batch(
+        data, p, max_chunks=max_chunks, interpret=_interpret()
+    )

@@ -127,6 +127,28 @@ def chunk_fingerprints(data, bounds, count, *, max_chunks: int):
 
 
 # ---------------------------------------------------------------------------
+# Fused chunk+fingerprint pipeline (single-dispatch service hot path).
+# ---------------------------------------------------------------------------
+
+
+def fused_pipeline(data, p, *, max_chunks: int):
+    """Oracle for kernels/fused_pipeline.py: the composed split path —
+    ``boundaries_batch(step_impl="wide")`` followed by the vmapped
+    reference ``chunk_fingerprints`` — over a ``(B, S)`` batch.  This is
+    the normative three-dispatch pipeline the fused kernel collapses.
+    """
+    from repro.core.seqcdc import boundaries_batch
+    from repro.dedup.fingerprint import chunk_fingerprints as _cf
+
+    bounds, counts = boundaries_batch(data, p, max_chunks=max_chunks)
+    fps, lens = jax.vmap(
+        lambda d, b, c: _cf(d, b, c, max_chunks=max_chunks,
+                            fp_impl="reference")
+    )(data, bounds, counts)
+    return bounds, counts, fps, lens
+
+
+# ---------------------------------------------------------------------------
 # Block maxima (VectorCDC / RAM-AE range-scan substrate).
 # ---------------------------------------------------------------------------
 

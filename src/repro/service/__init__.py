@@ -30,6 +30,7 @@ _EXPORTS = {
     "ChunkScheduler": ".scheduler",
     "FingerprintDivergenceError": ".scheduler",
     "MaskDivergenceError": ".scheduler",
+    "PipelineDivergenceError": ".scheduler",
     "SchedulerStats": ".scheduler",
     "ShardedDedupService": ".sharded",
     "AsyncWriteError": ".writer",

@@ -203,9 +203,11 @@ class DedupService(ServiceBase):
         mask_impl: str = "jnp",
         step_impl: str = "wide",
         fp_impl: str = "reference",
+        pipeline_impl: str | None = None,
         with_fingerprints: bool = True,
         cross_check_masks: bool = False,
         cross_check_fps: bool = False,
+        cross_check_pipeline: bool = False,
     ):
         self.params = params or derived_params(avg_chunk)
         self.store = store if store is not None else BlockStore()
@@ -213,9 +215,11 @@ class DedupService(ServiceBase):
         self.scheduler = ChunkScheduler(
             self.params, slots=slots, min_bucket=min_bucket,
             mask_impl=mask_impl, step_impl=step_impl, fp_impl=fp_impl,
+            pipeline_impl=pipeline_impl,
             with_fingerprints=with_fingerprints,
             cross_check_masks=cross_check_masks,
             cross_check_fps=cross_check_fps,
+            cross_check_pipeline=cross_check_pipeline,
         )
         # ingest-cumulative: tracks every chunk ever ingested (the estimator
         # semantics); deletes/overwrites do not shrink it, unlike the exact

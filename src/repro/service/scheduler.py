@@ -29,13 +29,21 @@ Both device stages have selectable backends (docs/KERNELS.md):
 ``mask_impl`` for the phase-1 bitmaps and ``fp_impl`` for chunk hashing
 (the fused Pallas fingerprint kernel vs the gather/segment_sum reference),
 each guarded by a first-dispatch bit-identity cross-check
-(``cross_check_masks`` / ``cross_check_fps``).
+(``cross_check_masks`` / ``cross_check_fps``).  Above both sits
+``pipeline_impl``: ``"split"`` runs the stages as separate dispatches,
+``"fused"`` collapses mask + boundary scan + fingerprints into the single
+``kernels/fused_pipeline.py`` dispatch (one byte read instead of three),
+guarded by its own first-dispatch cross-check against the composed split
+path (``cross_check_pipeline`` / ``PipelineDivergenceError``).  The
+default comes from ``REPRO_PIPELINE_IMPL`` (else ``"split"``), which is
+how CI runs the whole tier-1 suite through the fused path.
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Any, Dict, List
+import os
+from typing import Any, Dict, List, Literal
 
 import jax
 import jax.numpy as jnp
@@ -52,26 +60,63 @@ from repro.dedup.fingerprint import (
     fingerprints_numpy,
 )
 
+#: mirrors kernels/fused_pipeline.py's PipelineImpl — declared locally so
+#: importing the service does not pull the Pallas toolchain in eagerly
+#: (the kernel module is imported lazily, like every other kernel here)
+PipelineImpl = Literal["split", "fused"]
 
-@functools.partial(
-    jax.jit,
-    static_argnames=("p", "mc", "mask_impl", "step_impl", "with_fp", "fp_impl"),
-)
-def _device_chunk(x, *, p, mc, mask_impl, step_impl, with_fp, fp_impl):
-    """(B, S) uint8 -> (bounds, counts[, fps, lens]).  One module-level jit
-    (not a per-scheduler closure) so the compile cache is shared: a device
-    shape compiles once per process, not once per service instance.
-    """
+PIPELINE_IMPLS = ("split", "fused")
+
+
+def _default_pipeline_impl() -> str:
+    """``REPRO_PIPELINE_IMPL`` (CI's fused tier-1 leg sets it), else split."""
+    return os.environ.get("REPRO_PIPELINE_IMPL", "split")
+
+
+def _run_fused(x, p, mc):
+    """The fused single-dispatch pipeline (module-level so the divergence
+    tests can interpose a corrupted kernel, like ``chunk_fingerprints``)."""
+    from repro.kernels import ops as kernel_ops
+
+    return kernel_ops.fused_pipeline(x, p, max_chunks=mc)
+
+
+def _run_split(x, p, mc, mask_impl, step_impl, fp_impl):
+    """The composed three-dispatch pipeline (the fused kernel's oracle)."""
     bounds, counts = boundaries_batch(
         x, p, mask_impl=mask_impl, step_impl=step_impl, max_chunks=mc
     )
-    if not with_fp:
-        return bounds, counts, None, None
     fps, lens = jax.vmap(
         lambda d, b, c: chunk_fingerprints(d, b, c, max_chunks=mc,
                                            fp_impl=fp_impl)
     )(x, bounds, counts)
     return bounds, counts, fps, lens
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("p", "mc", "mask_impl", "step_impl", "with_fp", "fp_impl",
+                     "pipeline_impl"),
+)
+def _device_chunk(x, *, p, mc, mask_impl, step_impl, with_fp, fp_impl,
+                  pipeline_impl="split"):
+    """(B, S) uint8 -> (bounds, counts[, fps, lens]).  One module-level jit
+    (not a per-scheduler closure) so the compile cache is shared: a device
+    shape compiles once per process, not once per service instance.
+
+    ``pipeline_impl="fused"`` runs the whole thing — masks, boundary scan,
+    fingerprints — as the one ``kernels/fused_pipeline.py`` dispatch
+    (``mask_impl``/``fp_impl`` then select only the cross-check replays);
+    a fingerprint-less batch has nothing to fuse and takes the split path.
+    """
+    if pipeline_impl == "fused" and with_fp:
+        return _run_fused(x, p, mc)
+    if not with_fp:
+        bounds, counts = boundaries_batch(
+            x, p, mask_impl=mask_impl, step_impl=step_impl, max_chunks=mc
+        )
+        return bounds, counts, None, None
+    return _run_split(x, p, mc, mask_impl, step_impl, fp_impl)
 
 
 class MaskDivergenceError(AssertionError):
@@ -80,6 +125,19 @@ class MaskDivergenceError(AssertionError):
 
 class FingerprintDivergenceError(AssertionError):
     """The Pallas and reference fingerprint paths disagreed on a batch."""
+
+
+class PipelineDivergenceError(AssertionError):
+    """The fused and split pipelines disagreed on a dispatched batch.
+
+    ``stage`` names what diverged first: ``"boundaries"`` (the mask/scan
+    lanes emitted different chunking) or ``"fingerprints"`` (same chunks,
+    different hashes) — the first question a kernel regression asks.
+    """
+
+    def __init__(self, message: str, stage: str):
+        super().__init__(message)
+        self.stage = stage
 
 
 @dataclasses.dataclass
@@ -131,9 +189,11 @@ class ChunkScheduler:
         mask_impl: MaskImpl = "jnp",
         step_impl: StepImpl = "wide",
         fp_impl: FpImpl = "reference",
+        pipeline_impl: PipelineImpl | None = None,
         with_fingerprints: bool = True,
         cross_check_masks: bool = False,
         cross_check_fps: bool = False,
+        cross_check_pipeline: bool = False,
     ):
         from repro.core.params import derived_params
 
@@ -149,6 +209,14 @@ class ChunkScheduler:
         self.mask_impl = mask_impl
         self.step_impl = step_impl
         self.fp_impl = fp_impl
+        if pipeline_impl is None:
+            pipeline_impl = _default_pipeline_impl()
+        if pipeline_impl not in PIPELINE_IMPLS:
+            raise ValueError(
+                f"pipeline_impl must be one of {PIPELINE_IMPLS}, "
+                f"got {pipeline_impl!r}"
+            )
+        self.pipeline_impl = pipeline_impl
         self.with_fingerprints = with_fingerprints
         # bit-identity guard for the Pallas hot path: the first dispatch of
         # every device shape is replayed through the other mask backend and
@@ -164,6 +232,12 @@ class ChunkScheduler:
         # and poison the estimator index, so it gets the same guard
         self.cross_check_fps = cross_check_fps
         self._fp_checked_buckets: set[int] = set()
+        # and the pipeline-level guard: the first dispatch of every bucket
+        # is replayed through the *other* pipeline (fused <-> composed
+        # split) and compared bit-for-bit across bounds, counts, fps and
+        # lengths — PipelineDivergenceError names the stage that diverged
+        self.cross_check_pipeline = cross_check_pipeline
+        self._pipeline_checked_buckets: set[int] = set()
         self.stats = SchedulerStats()
         self._pending: Dict[int, List[ChunkRequest]] = {}
         self._ready: List[tuple[int, ChunkResult]] = []
@@ -236,6 +310,7 @@ class ChunkScheduler:
                 step_impl=self.step_impl,
                 with_fp=self.with_fingerprints,
                 fp_impl=self.fp_impl,
+                pipeline_impl=self.pipeline_impl,
             )
             self._jit_cache[bucket] = fn
         return fn
@@ -258,6 +333,11 @@ class ChunkScheduler:
             if self.cross_check_fps and bucket not in self._fp_checked_buckets:
                 self._fp_checked_buckets.add(bucket)
                 self._cross_check_fp(bucket, batch, bounds, counts, fps, lens)
+            if (self.cross_check_pipeline
+                    and bucket not in self._pipeline_checked_buckets):
+                self._pipeline_checked_buckets.add(bucket)
+                self._cross_check_pipeline(bucket, batch, bounds, counts,
+                                           fps, lens)
         self.stats.dispatches += 1
         self.stats.device_bytes += batch.size
         self.stats.padded_rows += rows - len(reqs)
@@ -309,6 +389,47 @@ class ChunkScheduler:
                 f"fp_impl={self.fp_impl!r} and {other!r} diverged on bucket "
                 f"{bucket} (rows {rows}): the Pallas fingerprint kernel no "
                 f"longer matches the gather-chain reference bit-for-bit"
+            )
+
+    def _cross_check_pipeline(self, bucket: int, batch: np.ndarray,
+                              bounds: np.ndarray, counts: np.ndarray,
+                              fps: np.ndarray, lens: np.ndarray):
+        """Replay one batch through the *other* pipeline (fused <-> composed
+        split) and compare everything bit-for-bit; the raised error names
+        the first stage that diverged — a wrong boundary and a wrong hash
+        point at different kernel lanes."""
+        mc = max_chunks_for(bucket, self.params)
+        x = jnp.asarray(batch)
+        if self.pipeline_impl == "fused":
+            other = "split"
+            b2, c2, f2, l2 = _run_split(x, self.params, mc, self.mask_impl,
+                                        self.step_impl, self.fp_impl)
+        else:
+            other = "fused"
+            b2, c2, f2, l2 = _run_fused(x, self.params, mc)
+        b2, c2 = np.asarray(b2), np.asarray(c2)
+        f2, l2 = np.asarray(f2), np.asarray(l2)
+        if not (np.array_equal(counts, c2) and np.array_equal(bounds, b2)):
+            rows = np.nonzero(
+                (counts != c2) | (bounds != b2).any(axis=-1)
+            )[0].tolist()
+            raise PipelineDivergenceError(
+                f"pipeline_impl={self.pipeline_impl!r} and {other!r} "
+                f"diverged on bucket {bucket} (rows {rows}) in the "
+                f"boundary stage: the fused kernel's mask/scan lanes no "
+                f"longer match the split path bit-for-bit",
+                stage="boundaries",
+            )
+        if not (np.array_equal(fps, f2) and np.array_equal(lens, l2)):
+            rows = np.nonzero(
+                (fps != f2).any(axis=(-2, -1)) | (lens != l2).any(axis=-1)
+            )[0].tolist()
+            raise PipelineDivergenceError(
+                f"pipeline_impl={self.pipeline_impl!r} and {other!r} "
+                f"diverged on bucket {bucket} (rows {rows}) in the "
+                f"fingerprint stage: identical chunk boundaries but the "
+                f"fused kernel's hash limb path no longer matches",
+                stage="fingerprints",
             )
 
     def _exactify(self, req: ChunkRequest, padded: np.ndarray,

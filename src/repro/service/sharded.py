@@ -98,8 +98,10 @@ class ShardedDedupService(ServiceBase):
         mask_impl: str = "jnp",
         step_impl: str = "wide",
         fp_impl: str = "reference",
+        pipeline_impl: str | None = None,
         cross_check_masks: bool = False,
         cross_check_fps: bool = False,
+        cross_check_pipeline: bool = False,
         async_flush: bool = True,
         max_pending: int = 256,
         mesh=None,
@@ -135,8 +137,10 @@ class ShardedDedupService(ServiceBase):
         self.scheduler = ChunkScheduler(
             self.params, slots=slots, min_bucket=min_bucket,
             mask_impl=mask_impl, step_impl=step_impl, fp_impl=fp_impl,
+            pipeline_impl=pipeline_impl,
             with_fingerprints=True, cross_check_masks=cross_check_masks,
             cross_check_fps=cross_check_fps,
+            cross_check_pipeline=cross_check_pipeline,
         )
         # validate the mesh before anything spawns threads: a constructor
         # that raises must not leak per-shard writer workers

@@ -1,0 +1,72 @@
+"""Scheduler occupancy regression pins (from bench_scheduler_occupancy).
+
+The occupancy benchmark exposed the scheduler's adversarial regimes —
+most notably the all-tiny mix riding the ``min_bucket`` floor at ~96% pad
+waste (ROADMAP: "scheduler occupancy fixes for the all-tiny regime").
+This file turns those numbers into a regression test: the known-bad
+regime is *pinned* inside a band, so a future sub-bucket row-packing fix
+shows up as a loud (and welcome) assertion failure here and gets the pin
+moved, while an accidental regression of the good regimes fails the floor
+assertions.  The benchmark itself is imported and run at the quick budget
+(seeded draws: the numbers are deterministic on a given machine).
+"""
+import os
+import sys
+
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from benchmarks.bench_scheduler_occupancy import DISTRIBUTIONS, run
+
+
+@pytest.fixture(scope="module")
+def occupancy_rows():
+    rows = run(budget="quick")
+    return {r["dist"]: r for r in rows}
+
+
+def test_all_distributions_reported(occupancy_rows):
+    assert set(occupancy_rows) == set(DISTRIBUTIONS)
+
+
+def test_all_tiny_regime_pinned(occupancy_rows):
+    """The known-bad bucket-floor regime: ~96% of device bytes are padding
+    because a few-hundred-byte stream pays for a min_bucket row.  Pinned
+    in a band — if sub-bucket packing lands, this is the test that moves.
+    """
+    r = occupancy_rows["all_tiny"]
+    assert 92.0 <= r["pad_waste_pct"] <= 99.5, r["pad_waste_pct"]
+    # the waste is *length* padding, not empty rows: rows are ~all filled,
+    # and every stream is shorter than a full max_size window, so the
+    # exact tail redo covers 100% of payload bytes
+    assert r["row_fill"] > 0.95, r["row_fill"]
+    assert r["tail_pct"] == pytest.approx(100.0), r["tail_pct"]
+    assert r["buckets"] == 1  # everything lands on the min_bucket floor
+
+
+def test_uniform_control_regime(occupancy_rows):
+    """The distribution batching likes must stay decent: a drop below the
+    floor means a scheduler regression, not workload noise."""
+    r = occupancy_rows["uniform"]
+    assert r["occupancy"] >= 0.55, r["occupancy"]
+    assert r["row_fill"] >= 0.6, r["row_fill"]
+
+
+def test_regime_ordering(occupancy_rows):
+    """Relative shape of the curve: uniform beats the adversarial mixes,
+    and all_tiny is the worst of them all."""
+    occ = {d: r["occupancy"] for d, r in occupancy_rows.items()}
+    assert occ["uniform"] > occ["bimodal"]
+    assert occ["uniform"] > occ["heavy_tail"]
+    assert occ["all_tiny"] == min(occ.values())
+    assert occ["all_tiny"] < 0.10  # the floor regime is far from fixed
+
+
+def test_device_bytes_account_for_padding(occupancy_rows):
+    """occupancy == stream/device bytes by construction; the two byte
+    counters must stay consistent with the reported ratio."""
+    for dist, r in occupancy_rows.items():
+        assert r["device_mb"] >= r["stream_mb"], dist
+        assert r["occupancy"] == pytest.approx(
+            r["stream_mb"] / r["device_mb"]), dist
