@@ -35,6 +35,32 @@ from .common import emit, random_data, time_throughput
 _BIG = jnp.int32(1 << 30)
 
 
+def roofline_fraction(fn, args, measured_s: float):
+    """Fraction of the modeled TPU-v5e roofline a measured run achieves.
+
+    The compiled module's trip-count-aware flop/byte totals
+    (``repro.roofline.hlo_cost``) bound the step at
+    ``max(flops/peak, bytes/hbm_bw)``; the fraction is that bound over the
+    measured time.  On the CPU container this is a small number — the model
+    targets the accelerator, the measurement is the host — but it moves
+    with the kernel's arithmetic/byte footprint, which is what a
+    memory-bound chunking kernel needs watched per PR.  ``None`` when the
+    HLO defeats the cost model (the column stays honest, not zero).
+    """
+    from repro.roofline import constants as C
+    from repro.roofline.hlo_cost import HloCostModel
+
+    try:
+        compiled = fn.lower(*args).compile()
+        cost = HloCostModel(compiled.as_text()).total()
+        modeled_s = max(cost.flops / C.PEAK_FLOPS_BF16, cost.bytes / C.HBM_BW)
+        if modeled_s <= 0.0 or measured_s <= 0.0:
+            return None
+        return modeled_s / measured_s
+    except Exception:  # pragma: no cover — unparsable backend HLO
+        return None
+
+
 def _fingerprint_rows(budget: str, mb: int) -> list:
     """fp_impl="reference" vs "pallas" on one pre-chunked stream."""
     p = derived_params(8192)
@@ -58,7 +84,9 @@ def _fingerprint_rows(budget: str, mb: int) -> list:
         gbps[impl] = res["gbps"]
         rows.append({"figure": "fingerprint-kernel", "budget": budget,
                      "fp_impl": impl, "stream_mb": mb,
-                     "gbits_per_s": res["gbps"]})
+                     "gbits_per_s": res["gbps"],
+                     "roofline_fraction": roofline_fraction(
+                         fn, (data, bounds, count), res["seconds"])})
     rows[-1]["speedup_vs_reference"] = gbps["pallas"] / gbps["reference"]
     return rows
 
@@ -91,7 +119,9 @@ def _pipeline_rows(budget: str, mb: int) -> list:
         gbps[impl] = res["gbps"]
         rows.append({"figure": "fused-pipeline", "budget": budget,
                      "pipeline_impl": impl, "stream_mb": mb,
-                     "gbits_per_s": res["gbps"]})
+                     "gbits_per_s": res["gbps"],
+                     "roofline_fraction": roofline_fraction(
+                         fn, (data,), res["seconds"])})
     rows[-1]["speedup_vs_split"] = gbps["fused"] / gbps["split"]
     return rows
 
@@ -126,7 +156,9 @@ def run(budget: str = "small"):
         )
         res = time_throughput(lambda: jax.block_until_ready(fn(data)), n)
         rows.append({"figure": "sec5-intrinsics", "primitive": f"automaton-{impl}",
-                     "gbits_per_s": res["gbps"], "block_w": p.block_width})
+                     "gbits_per_s": res["gbps"], "block_w": p.block_width,
+                     "roofline_fraction": roofline_fraction(
+                         fn, (data,), res["seconds"])})
     rows.extend(_fingerprint_rows(budget, mb))
     rows.extend(_pipeline_rows(budget, mb))
     emit(rows, "VPU-primitive microbench (paper SSV analogue)")

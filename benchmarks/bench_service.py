@@ -96,6 +96,9 @@ def run(budget: str = "small") -> None:
             "dedup_ratio": st.dedup_ratio,
             "batch_occupancy": st.batch_occupancy,
         })
+        # telemetry of the timed (second) cold-store ingest + the restores:
+        # the dispatch-latency/backpressure story behind the rows above
+        common.emit_metrics(f"service_fp{int(with_fp)}", svc.metrics())
     common.emit(rows, "service: end-to-end ingest vs raw chunking")
 
 

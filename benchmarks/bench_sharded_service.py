@@ -59,6 +59,9 @@ def _cell(versions, total: int, shards: int, async_flush: bool,
 
     per = svc.shard_stats()
     uniques = [s["unique_chunks"] for s in per]
+    common.emit_metrics(
+        f"sharded_s{shards}_async{int(async_flush)}", svc.metrics()
+    )
     svc.close()
     return {
         "budget": budget,

@@ -60,9 +60,21 @@ def random_data(mb: int, seed: int = 0) -> np.ndarray:
 #: trajectories are machine-comparable, not just stdout CSV.
 RESULTS: List[Dict] = []
 
+#: metrics snapshots collected via emit_metrics() — serialized by run.py
+#: under the report's top-level "metrics" key, so a BENCH_*.json carries
+#: the service-internal telemetry (dispatch latency, writer backpressure,
+#: RPC counts) that produced its throughput rows (docs/OBSERVABILITY.md)
+METRICS: Dict[str, Dict] = {}
+
 
 def reset_results():
     RESULTS.clear()
+    METRICS.clear()
+
+
+def emit_metrics(name: str, snapshot: Dict):
+    """Attach one service ``metrics()`` snapshot to the run report."""
+    METRICS[name] = snapshot
 
 
 def emit(rows: List[Dict], title: str):

@@ -14,13 +14,62 @@ fields (the service benchmarks do); consumers should fall back to the
 meta defaults for rows that don't.  This is what makes BENCH_*.json
 trajectories comparable across PRs: a throughput delta can be attributed
 to the code or to a config change, not guessed at.
+
+The meta header also carries a ``provenance`` block (git SHA with a
+-dirty marker, UTC timestamp, hostname, jax version, device kind) tying
+each trajectory point to an exact code state and machine, and the report's
+``metrics`` key embeds the service-internal telemetry snapshots the
+service benchmarks capture via ``common.emit_metrics`` — dispatch
+latencies, writer backpressure, RPC counts (render them with
+``scripts/obs_report.py``).
 """
 from __future__ import annotations
 
 import argparse
+import datetime
 import json
+import os
+import socket
+import subprocess
 import sys
 import time
+
+
+def provenance() -> dict:
+    """Where/when/what a BENCH_*.json came from: git SHA (with a -dirty
+    suffix when the tree has uncommitted changes), UTC timestamp, host,
+    jax version, and the device kind behind the backend — enough to tie a
+    throughput trajectory point back to an exact code state and machine."""
+    here = os.path.dirname(os.path.abspath(__file__))
+
+    def _git(*argv):
+        try:
+            return subprocess.run(
+                ["git", *argv], cwd=here, capture_output=True, text=True,
+                timeout=10,
+            ).stdout.strip()
+        except (OSError, subprocess.SubprocessError):
+            return ""
+
+    sha = _git("rev-parse", "HEAD") or None
+    if sha and _git("status", "--porcelain"):
+        sha += "-dirty"
+
+    import jax
+
+    try:
+        device_kind = jax.devices()[0].device_kind
+    except Exception:  # pragma: no cover — backend with no devices
+        device_kind = None
+    return {
+        "git_sha": sha,
+        "timestamp_utc": datetime.datetime.now(
+            datetime.timezone.utc
+        ).isoformat(timespec="seconds"),
+        "hostname": socket.gethostname(),
+        "jax_version": jax.__version__,
+        "device_kind": device_kind,
+    }
 
 MODULES = [
     "bench_calibrate",        # Table I / SSV
@@ -101,8 +150,12 @@ def main() -> None:
             "modules": mods,
             "failed_modules": failures,
             "defaults": dict(DEFAULTS),
+            "provenance": provenance(),
         },
         "results": common.RESULTS,
+        # service-internal telemetry captured by the benchmarks that run a
+        # full service (emit_metrics): the *why* behind the throughput rows
+        "metrics": common.METRICS,
     }
     with open(json_path, "w") as f:
         json.dump(report, f, indent=1)

@@ -11,6 +11,7 @@ stage failed:
   3. service dev check        (scripts/dev_check_service.py)
   4. sharded service check    (scripts/dev_check_sharded.py)
   5. transport check          (scripts/dev_check_transport.py)
+  6. observability check      (scripts/dev_check_obs.py)
 
 This is what CI runs (.github/workflows/ci.yml); locally, ``--fast`` is the
 pre-commit loop and the full form is the pre-PR gate.
@@ -61,6 +62,7 @@ def main(argv=None) -> int:
         ("sharded check", [py, os.path.join("scripts", "dev_check_sharded.py")]),
         ("transport check",
          [py, os.path.join("scripts", "dev_check_transport.py")]),
+        ("obs check", [py, os.path.join("scripts", "dev_check_obs.py")]),
     ]
 
     results = [_stage(name, cmd) for name, cmd in stages]

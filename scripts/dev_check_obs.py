@@ -1,0 +1,117 @@
+"""Dev sanity: the observability layer measures without perturbing.
+
+Seconds-fast smoke for ``repro.obs`` and its wiring (docs/OBSERVABILITY.md):
+
+  1. registry arithmetic — counters, gauges, histogram percentiles, merge;
+  2. tracing-on bit-identity — the same corpus ingested with ``REPRO_TRACE``
+     set produces byte-identical stores/restores, and the trace file holds
+     parseable span records for every instrumented stage;
+  3. remote telemetry — a 2-shard remote service's ``metrics()`` returns
+     live per-server snapshots whose RPC calls/bytes agree exactly with the
+     client-side counters, op by op;
+  4. ``scripts/obs_report.py`` renders all three artifact kinds.
+
+Exits non-zero on failure.
+"""
+import json
+import os
+import subprocess
+import sys
+import tempfile
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.core.params import SeqCDCParams
+from repro.data.corpus import snapshot_series
+from repro.obs import MetricsRegistry, merge_snapshots
+from repro.service import DedupService, ShardedDedupService
+
+fail = 0
+
+P = SeqCDCParams(avg_size=256, seq_length=3, skip_trigger=6, skip_size=32,
+                 min_size=64, max_size=512)
+versions = list(snapshot_series(base_bytes=1 << 16, snapshots=3,
+                                edit_rate=2e-5, seed=11))
+
+# 1) registry arithmetic
+reg = MetricsRegistry()
+for v in (0.010, 0.011, 0.012, 0.9):
+    reg.observe("lat_s", v)
+reg.inc("n", 7)
+reg.set_gauge("depth", 3)
+snap = reg.snapshot()
+h = snap["histograms"]["lat_s"]
+if not (0.008 < h["p50"] < 0.014 and 0.5 < h["p99"] < 1.3):
+    print(f"[registry] percentile resolution off: p50={h['p50']} p99={h['p99']}")
+    fail += 1
+merged = merge_snapshots([snap, snap, None])
+if merged["counters"]["n"] != 14 or merged["histograms"]["lat_s"]["count"] != 8:
+    print("[registry] merge_snapshots did not sum (None must be skipped)")
+    fail += 1
+
+
+def ingest(svc):
+    for i, v in enumerate(versions):
+        svc.submit(f"v{i}", v)
+    svc.flush()
+    return [svc.get(f"v{i}") for i in range(len(versions))]
+
+
+# 2) tracing-on bit-identity + span records per stage
+with tempfile.TemporaryDirectory() as tmp:
+    trace = os.path.join(tmp, "trace.jsonl")
+    base = ingest(DedupService(params=P, slots=4, min_bucket=1024))
+    os.environ["REPRO_TRACE"] = trace
+    try:
+        traced = ingest(DedupService(params=P, slots=4, min_bucket=1024))
+    finally:
+        del os.environ["REPRO_TRACE"]
+    if base != traced:
+        print("[trace] restores diverged with REPRO_TRACE set")
+        fail += 1
+    names = set()
+    with open(trace) as f:
+        for line in f:
+            names.add(json.loads(line)["name"])
+    for want in ("sched.dispatch", "service.flush", "service.get"):
+        if want not in names:
+            print(f"[trace] no {want!r} span in the trace (saw {sorted(names)})")
+            fail += 1
+
+    # 3) remote telemetry: client/server agreement, op by op
+    svc = ShardedDedupService.open(os.path.join(tmp, "depot"), 2,
+                                   transport="remote", params=P, slots=4,
+                                   min_bucket=1024)
+    try:
+        ingest(svc)
+        m = svc.metrics()
+        if any(s is None for s in m["shards"]) or len(m["shards"]) != 2:
+            print(f"[remote] expected 2 live shard snapshots, got {m['shards']}")
+            fail += 1
+        cc = m["service"]["counters"]
+        sc = (m["aggregate"] or {}).get("counters", {})
+        for k, v in cc.items():
+            for mine, theirs in (("rpc.client.calls{", "rpc.server.calls{"),
+                                 ("rpc.client.send_bytes{",
+                                  "rpc.server.recv_bytes{")):
+                if k.startswith(mine) and sc.get(theirs + k[len(mine):]) != v:
+                    print(f"[remote] {k}={v} != server "
+                          f"{sc.get(theirs + k[len(mine):])}")
+                    fail += 1
+    finally:
+        svc.close()
+
+    # 4) obs_report renders every artifact kind
+    mpath = os.path.join(tmp, "metrics.json")
+    with open(mpath, "w") as f:
+        json.dump(m, f)
+    report = os.path.join(os.path.dirname(__file__), "obs_report.py")
+    for art in (mpath, trace):
+        r = subprocess.run([sys.executable, report, art],
+                           capture_output=True, text=True)
+        if r.returncode != 0 or not r.stdout.strip():
+            print(f"[report] obs_report.py failed on {art}: {r.stderr}")
+            fail += 1
+
+print("dev_check_obs:", "FAIL" if fail else "OK")
+sys.exit(1 if fail else 0)

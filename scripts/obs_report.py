@@ -1,0 +1,195 @@
+"""Render observability data as human-readable tables.
+
+    python scripts/obs_report.py metrics.json          # a metrics() snapshot
+    python scripts/obs_report.py BENCH_quick.json      # a benchmark report
+    python scripts/obs_report.py trace.jsonl           # a REPRO_TRACE log
+    ... --json                                         # normalized JSON out
+
+Accepts any of the three on-disk shapes the observability layer produces
+(docs/OBSERVABILITY.md) and auto-detects which it was given:
+
+* a ``metrics()`` dict (``{"service", "shards", "aggregate"}``) or a bare
+  ``MetricsRegistry.snapshot()`` — counters/gauges as sorted tables,
+  histograms as count/mean/p50/p95/p99 rows;
+* a ``benchmarks/run.py`` report — provenance header plus one metrics
+  section per captured service (the report's ``metrics`` key);
+* a ``REPRO_TRACE`` JSONL file — per-span-name aggregation (count, total
+  and p95 wall seconds, CPU/wall ratio, total bytes).
+
+Stdlib-only, like everything under ``repro.obs``.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.obs.metrics import _quantiles, bucket_index  # noqa: E402
+
+
+def _fmt(v) -> str:
+    if isinstance(v, float):
+        return f"{v:.4g}"
+    return str(v)
+
+
+def _table(rows: list[dict], title: str):
+    print(f"\n# {title}")
+    if not rows:
+        print("(empty)")
+        return
+    cols = list(rows[0])
+    widths = [max(len(c), max(len(_fmt(r.get(c, ""))) for r in rows))
+              for c in cols]
+    print("  ".join(c.ljust(w) for c, w in zip(cols, widths)))
+    for r in rows:
+        print("  ".join(_fmt(r.get(c, "")).ljust(w)
+                        for c, w in zip(cols, widths)))
+
+
+def snapshot_rows(snap: dict) -> dict[str, list[dict]]:
+    """One snapshot -> {"counters": rows, "gauges": rows, "histograms": rows}."""
+    return {
+        "counters": [{"counter": k, "value": v}
+                     for k, v in sorted(snap.get("counters", {}).items())],
+        "gauges": [{"gauge": k, "value": v}
+                   for k, v in sorted(snap.get("gauges", {}).items())],
+        "histograms": [
+            {"histogram": k, "count": h["count"], "mean": h["mean"],
+             "p50": h["p50"], "p95": h["p95"], "p99": h["p99"],
+             "max": h["max"], "sum": h["sum"]}
+            for k, h in sorted(snap.get("histograms", {}).items())
+        ],
+    }
+
+
+def render_snapshot(snap: dict, label: str):
+    for kind, rows in snapshot_rows(snap).items():
+        if rows:
+            _table(rows, f"{label}: {kind}")
+
+
+def render_metrics(m: dict):
+    """A full ``service.metrics()`` dict: service + per-shard + aggregate."""
+    render_snapshot(m.get("service", {}), "service")
+    shards = m.get("shards") or []
+    for i, s in enumerate(shards):
+        if s is None:
+            print(f"\n# shard {i}: UNREACHABLE (no snapshot)")
+        else:
+            render_snapshot(s, f"shard {i}")
+    if m.get("aggregate"):
+        render_snapshot(m["aggregate"], "aggregate (all shards)")
+
+
+def render_bench(report: dict):
+    meta = report.get("meta", {})
+    prov = meta.get("provenance", {})
+    _table([{**{"budget": meta.get("budget"),
+                "backend": meta.get("backend")}, **prov}],
+           "benchmark run")
+    metrics = report.get("metrics", {})
+    if not metrics:
+        print("\n(report embeds no metrics snapshots)")
+    for name, m in sorted(metrics.items()):
+        print(f"\n## {name}")
+        render_metrics(m)
+
+
+def trace_summary(path: str) -> list[dict]:
+    """Aggregate a JSONL trace per span name."""
+    agg: dict[str, dict] = {}
+    with open(path, encoding="utf-8") as f:
+        for line in f:
+            line = line.strip()
+            if not line:
+                continue
+            try:
+                rec = json.loads(line)
+            except json.JSONDecodeError:
+                continue  # torn tail line from a killed process
+            a = agg.setdefault(rec.get("name", "?"), {
+                "count": 0, "wall_s": 0.0, "cpu_s": 0.0, "bytes": 0,
+                "errors": 0, "walls": [],
+            })
+            a["count"] += 1
+            a["wall_s"] += rec.get("wall_s", 0.0)
+            a["cpu_s"] += rec.get("cpu_s", 0.0)
+            for k in ("bytes", "payload_bytes", "recv_bytes"):
+                if k in rec:
+                    a["bytes"] += rec[k]
+                    break
+            a["errors"] += 1 if "error" in rec else 0
+            a["walls"].append(rec.get("wall_s", 0.0))
+    rows = []
+    for name, a in sorted(agg.items()):
+        buckets: dict[int, int] = {}
+        for w in a["walls"]:
+            i = bucket_index(w)
+            buckets[i] = buckets.get(i, 0) + 1
+        (p95,) = _quantiles(buckets, a["count"], (0.95,))
+        rows.append({
+            "span": name, "count": a["count"], "wall_s": a["wall_s"],
+            "p95_wall_s": p95,
+            "cpu/wall": a["cpu_s"] / a["wall_s"] if a["wall_s"] else 0.0,
+            "bytes": a["bytes"], "errors": a["errors"],
+        })
+    return rows
+
+
+def classify(path: str):
+    """-> ("trace"|"bench"|"metrics"|"snapshot", parsed payload)."""
+    with open(path, encoding="utf-8") as f:
+        head = f.read(1)
+        f.seek(0)
+        if head != "{":
+            return "trace", None
+        try:
+            doc = json.load(f)
+        except json.JSONDecodeError:
+            return "trace", None  # JSONL: line 2+ broke the single-doc parse
+    if not isinstance(doc, dict):
+        raise SystemExit(f"{path}: not an observability artifact")
+    if "results" in doc and "meta" in doc:
+        return "bench", doc
+    if "service" in doc and "shards" in doc:
+        return "metrics", doc
+    if {"counters", "gauges", "histograms"} & set(doc):
+        return "snapshot", doc
+    # single-line JSONL traces parse as one dict; spans always carry these
+    if "wall_s" in doc and "name" in doc:
+        return "trace", None
+    raise SystemExit(f"{path}: not an observability artifact")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("path", help="metrics JSON, BENCH_*.json, or trace JSONL")
+    ap.add_argument("--json", action="store_true",
+                    help="emit normalized JSON instead of tables")
+    args = ap.parse_args(argv)
+    kind, doc = classify(args.path)
+    if kind == "trace":
+        rows = trace_summary(args.path)
+        if args.json:
+            json.dump(rows, sys.stdout, indent=1)
+            print()
+        else:
+            _table(rows, f"trace summary: {args.path}")
+    elif args.json:
+        json.dump(doc, sys.stdout, indent=1)
+        print()
+    elif kind == "bench":
+        render_bench(doc)
+    elif kind == "metrics":
+        render_metrics(doc)
+    else:
+        render_snapshot(doc, args.path)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,39 @@
+"""repro.obs — stdlib-only observability: metrics registry + span tracing.
+
+The measurement substrate every service layer reports through
+(docs/OBSERVABILITY.md is the catalog):
+
+* :class:`MetricsRegistry` — thread-safe counters, gauges, and log-bucketed
+  histograms with p50/p95/p99 export; :func:`merge_snapshots` aggregates
+  many snapshots (e.g. the per-shard-server ones fetched over the wire by
+  ``ShardedDedupService.metrics()``) into one.
+* :func:`span` — pipeline tracing context manager emitting JSONL records
+  (wall/CPU time + byte counts) when ``REPRO_TRACE`` is set; a shared
+  no-op otherwise.
+
+Deliberately *not* lazy and deliberately dependency-free: the numpy-only
+shard server processes import this package, so it must stay importable
+without jax, numpy, or anything outside the standard library.
+"""
+from .metrics import (
+    BUCKETS_PER_OCTAVE,
+    MetricsRegistry,
+    bucket_index,
+    bucket_value,
+    labeled,
+    merge_snapshots,
+)
+from .trace import TRACE_ENV, Span, enabled, span
+
+__all__ = [
+    "BUCKETS_PER_OCTAVE",
+    "MetricsRegistry",
+    "Span",
+    "TRACE_ENV",
+    "bucket_index",
+    "bucket_value",
+    "enabled",
+    "labeled",
+    "merge_snapshots",
+    "span",
+]

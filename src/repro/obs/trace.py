@@ -1,0 +1,141 @@
+"""Span-based pipeline tracing, emitted as JSONL when ``REPRO_TRACE`` is set.
+
+A *span* wraps one unit of pipeline work — a scheduler dispatch, a flush, a
+writer task, an RPC — and records wall time, thread-CPU time, and whatever
+attributes the call site attaches (byte counts, bucket sizes, op names):
+
+    with span("sched.dispatch", bucket=bucket) as sp:
+        ...
+        sp["rows"] = rows          # attrs can be added mid-span
+
+One JSON object per line (the schema in docs/OBSERVABILITY.md):
+
+    {"ts": <epoch s at span end>, "name": "...", "wall_s": ..., "cpu_s": ...,
+     "pid": ..., "thread": "...", ...attrs}
+
+``REPRO_TRACE`` selects the sink: a path appends JSONL there (parents
+created); ``1``/``stderr`` writes to stderr.  Unset (the default) makes
+:func:`span` return a shared no-op whose enter/exit is two attribute
+lookups — tracing must cost nothing when it is off, and must never change
+results when it is on (CI runs the whole tier-1 suite with it enabled).
+
+The environment variable is re-read on every span start, so tests and
+long-lived services can toggle tracing without restarting; the output file
+handle is cached per path and writes are serialized under one lock
+(spans from writer threads and RPC handlers interleave).
+
+Stdlib-only, like the rest of ``repro.obs`` — shard servers trace too.
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+import threading
+import time
+from typing import Optional, TextIO
+
+#: the switch: unset/empty = off; "1"/"stderr" = stderr; else = JSONL path
+TRACE_ENV = "REPRO_TRACE"
+
+_lock = threading.Lock()
+_sink_path: Optional[str] = None
+_sink_file: Optional[TextIO] = None
+
+
+def enabled() -> bool:
+    """True when ``REPRO_TRACE`` selects a sink (re-read every call)."""
+    return bool(os.environ.get(TRACE_ENV))
+
+
+def _sink() -> TextIO:
+    """The current sink stream (caller holds ``_lock``)."""
+    global _sink_path, _sink_file
+    target = os.environ.get(TRACE_ENV, "")
+    if target in ("1", "stderr"):
+        return sys.stderr
+    if target != _sink_path:
+        if _sink_file is not None:
+            try:
+                _sink_file.close()
+            except OSError:
+                pass
+        parent = os.path.dirname(target)
+        if parent:
+            os.makedirs(parent, exist_ok=True)
+        _sink_file = open(target, "a", encoding="utf-8")
+        _sink_path = target
+    return _sink_file  # type: ignore[return-value]
+
+
+def _emit(record: dict):
+    line = json.dumps(record, separators=(",", ":"), default=str)
+    with _lock:
+        try:
+            out = _sink()
+            out.write(line + "\n")
+            out.flush()
+        except OSError:
+            pass  # a torn sink must never take the pipeline down
+
+
+class _NullSpan:
+    """Shared do-nothing span for the tracing-off path."""
+
+    __slots__ = ()
+
+    def __enter__(self) -> "_NullSpan":
+        return self
+
+    def __exit__(self, *exc) -> bool:
+        return False
+
+    def __setitem__(self, key, value):
+        pass
+
+
+_NULL = _NullSpan()
+
+
+class Span:
+    """One traced unit of work (use via :func:`span`, not directly)."""
+
+    __slots__ = ("name", "attrs", "_t0", "_c0")
+
+    def __init__(self, name: str, attrs: dict):
+        self.name = name
+        self.attrs = attrs
+
+    def __enter__(self) -> "Span":
+        self._t0 = time.perf_counter()
+        self._c0 = time.thread_time()
+        return self
+
+    def __exit__(self, etype, exc, tb) -> bool:
+        record = {
+            "ts": time.time(),
+            "name": self.name,
+            "wall_s": time.perf_counter() - self._t0,
+            "cpu_s": time.thread_time() - self._c0,
+            "pid": os.getpid(),
+            "thread": threading.current_thread().name,
+        }
+        if etype is not None:
+            record["error"] = etype.__name__
+        record.update(self.attrs)
+        _emit(record)
+        return False  # exceptions always propagate
+
+    def __setitem__(self, key, value):
+        self.attrs[key] = value
+
+
+def span(name: str, **attrs):
+    """Start a span named ``name`` with initial attributes ``attrs``.
+
+    Returns the shared no-op when tracing is off, so call sites need no
+    ``if`` of their own.
+    """
+    if not os.environ.get(TRACE_ENV):
+        return _NULL
+    return Span(name, attrs)

@@ -24,11 +24,13 @@ from __future__ import annotations
 import dataclasses
 import hashlib
 import os
+import time
 from collections import Counter
 from typing import Dict, List, Optional
 
 from repro.core.params import SeqCDCParams, derived_params
 from repro.dedup import BlockStore, DirBlockStore, FingerprintIndex
+from repro.obs import MetricsRegistry, merge_snapshots, span
 
 from .objects import ObjectRecipe, RecipeTable
 from .scheduler import ChunkResult, ChunkScheduler
@@ -146,6 +148,9 @@ class ServiceBase:
     recipes: RecipeTable
     scheduler: "ChunkScheduler"
     _in_flight: set
+    #: the service-wide MetricsRegistry every layer under this service
+    #: reports into (scheduler, writers, transport clients)
+    obs: MetricsRegistry
 
     def submit(self, name: str, data, *, overwrite: bool = False) -> int:
         """Queue one object for ingest; returns its ticket (a sequence id).
@@ -187,6 +192,30 @@ class ServiceBase:
         """Sorted names of all committed objects (in-flight ones excluded)."""
         return self.recipes.names()
 
+    # -- observability ----------------------------------------------------------
+    def metrics(self) -> dict:
+        """Live telemetry snapshot (docs/OBSERVABILITY.md has the catalog).
+
+        ``service`` is this process's registry — ingest/restore counters,
+        scheduler occupancy and dispatch latency, writer backpressure,
+        client-side RPC metrics.  ``shards`` holds one server-side snapshot
+        per shard store (remote transport only: fetched live over the wire
+        via the ``metrics`` op; empty otherwise), with ``None`` standing in
+        for an unreachable server.  ``aggregate`` merges the reachable
+        shard snapshots: counters sum, histograms merge bucket-wise and
+        re-derive their percentiles.
+        """
+        shards = self._shard_metric_snapshots()
+        return {
+            "service": self.obs.snapshot(),
+            "shards": shards,
+            "aggregate": merge_snapshots(shards) if shards else None,
+        }
+
+    def _shard_metric_snapshots(self) -> List[Optional[dict]]:
+        """Per-shard server-side snapshots; base services have none."""
+        return []
+
 
 class DedupService(ServiceBase):
     """Streaming dedup: batched chunking in front of a GC-capable chunk store."""
@@ -212,8 +241,11 @@ class DedupService(ServiceBase):
         self.params = params or derived_params(avg_chunk)
         self.store = store if store is not None else BlockStore()
         self.recipes = recipes if recipes is not None else RecipeTable()
+        # per-service (not global) registry: tests and side-by-side services
+        # never share counters; the scheduler reports into the same one
+        self.obs = MetricsRegistry()
         self.scheduler = ChunkScheduler(
-            self.params, slots=slots, min_bucket=min_bucket,
+            self.params, registry=self.obs, slots=slots, min_bucket=min_bucket,
             mask_impl=mask_impl, step_impl=step_impl, fp_impl=fp_impl,
             pipeline_impl=pipeline_impl,
             with_fingerprints=with_fingerprints,
@@ -247,21 +279,25 @@ class DedupService(ServiceBase):
         # whatever drain() does — return results, or lose requests to a
         # device-side error — the submitted names are no longer pending, so
         # they must stop blocking resubmission
-        try:
-            results = self.scheduler.drain()
-        finally:
-            self._in_flight.clear()
-        out = []
-        stale: List[str] = []
-        for res in results:
-            stat, old_keys = self._commit(res)
-            out.append(stat)
-            stale.extend(old_keys)
-        self.sync()
-        if stale:
-            for k in stale:
-                self.store.release(k)
+        t0 = time.perf_counter()
+        with span("service.flush") as sp:
+            try:
+                results = self.scheduler.drain()
+            finally:
+                self._in_flight.clear()
+            out = []
+            stale: List[str] = []
+            for res in results:
+                stat, old_keys = self._commit(res)
+                out.append(stat)
+                stale.extend(old_keys)
             self.sync()
+            if stale:
+                for k in stale:
+                    self.store.release(k)
+                self.sync()
+            sp["objects"] = len(out)
+        self.obs.observe("service.flush_s", time.perf_counter() - t0)
         return out
 
     def _commit(self, res: ChunkResult) -> tuple[ObjectStat, List[str]]:
@@ -272,7 +308,15 @@ class DedupService(ServiceBase):
         """
         name = str(res.tag)
         old = self.recipes.get(name) if name in self.recipes else None
+        before = self.store.unique_chunks
         keys = self.store.put_stream(res.data, res.bounds.tolist())
+        # a dedup hit = a chunk whose key the store already held; measured
+        # by the unique-count delta so no second hash pass runs
+        self.obs.inc("ingest.objects")
+        self.obs.inc("ingest.bytes", res.size)
+        self.obs.inc("ingest.chunks", len(keys))
+        self.obs.inc("ingest.dedup_hit_chunks",
+                     len(keys) - (self.store.unique_chunks - before))
         recipe = ObjectRecipe(
             name=name,
             size=res.size,
@@ -298,7 +342,13 @@ class DedupService(ServiceBase):
         than returning wrong bytes.  ``KeyError`` for unknown names.
         """
         r = self.recipes.get(name)
-        return verify_restore(r, self.store.get_stream(r.keys))
+        t0 = time.perf_counter()
+        with span("service.get", object=name, bytes=r.size):
+            data = verify_restore(r, self.store.get_stream(r.keys))
+        self.obs.observe("service.get_s", time.perf_counter() - t0)
+        self.obs.inc("restore.objects")
+        self.obs.inc("restore.bytes", r.size)
+        return data
 
     # -- delete / GC ------------------------------------------------------------
     def delete(self, name: str) -> int:

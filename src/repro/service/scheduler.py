@@ -43,6 +43,7 @@ from __future__ import annotations
 import dataclasses
 import functools
 import os
+import time
 from typing import Any, Dict, List, Literal
 
 import jax
@@ -50,6 +51,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import oracle
+from repro.obs import MetricsRegistry, labeled, span
 from repro.core.automaton import max_chunks_for
 from repro.core.params import SeqCDCParams
 from repro.core.seqcdc import MaskImpl, StepImpl, boundaries_batch
@@ -194,6 +196,7 @@ class ChunkScheduler:
         cross_check_masks: bool = False,
         cross_check_fps: bool = False,
         cross_check_pipeline: bool = False,
+        registry: MetricsRegistry | None = None,
     ):
         from repro.core.params import derived_params
 
@@ -239,6 +242,18 @@ class ChunkScheduler:
         self.cross_check_pipeline = cross_check_pipeline
         self._pipeline_checked_buckets: set[int] = set()
         self.stats = SchedulerStats()
+        # always-on metrics (docs/OBSERVABILITY.md): the owning service
+        # passes its registry so scheduler metrics land in its snapshot;
+        # a bare scheduler gets its own
+        self.obs = registry if registry is not None else MetricsRegistry()
+        # the dispatch-latency histogram is labeled by the static pipeline
+        # configuration, so a BENCH trajectory can attribute a latency
+        # shift to an impl flip; rendered once, not per dispatch
+        self._dispatch_hist = labeled(
+            "sched.dispatch_s", pipeline=self.pipeline_impl,
+            mask=self.mask_impl, fp=self.fp_impl,
+        )
+        self._bucket_metric_names: Dict[int, tuple[str, str, str]] = {}
         self._pending: Dict[int, List[ChunkRequest]] = {}
         self._ready: List[tuple[int, ChunkResult]] = []
         self._jit_cache: Dict[int, Any] = {}
@@ -315,32 +330,70 @@ class ChunkScheduler:
             self._jit_cache[bucket] = fn
         return fn
 
+    def _bucket_names(self, bucket: int) -> tuple[str, str, str]:
+        """(occupancy, pad_waste, batch_rows) gauge names for one bucket,
+        rendered once per bucket rather than once per dispatch."""
+        names = self._bucket_metric_names.get(bucket)
+        if names is None:
+            names = (
+                labeled("sched.occupancy", bucket=bucket),
+                labeled("sched.pad_waste", bucket=bucket),
+                labeled("sched.batch_rows", bucket=bucket),
+            )
+            self._bucket_metric_names[bucket] = names
+        return names
+
     def _dispatch(self, bucket: int):
         rows = self._slots_for(bucket)
         reqs = self._pending[bucket]
         self._pending[bucket] = []
+        payload = sum(r.data.size for r in reqs)
         batch = np.zeros((rows, bucket), dtype=np.uint8)
         for row, r in enumerate(reqs):
             batch[row, : r.data.size] = r.data
-        bounds, counts, fps, lens = self._device_fn(bucket)(jnp.asarray(batch))
-        bounds = np.asarray(bounds)
-        counts = np.asarray(counts)
+        with span("sched.dispatch", bucket=bucket, rows=len(reqs),
+                  payload_bytes=payload, device_bytes=batch.size):
+            t0 = time.perf_counter()
+            bounds, counts, fps, lens = self._device_fn(bucket)(
+                jnp.asarray(batch)
+            )
+            # np.asarray forces device completion, so the elapsed time is
+            # the real dispatch latency, not the async-enqueue cost
+            bounds = np.asarray(bounds)
+            counts = np.asarray(counts)
+            if fps is not None:
+                fps, lens = np.asarray(fps), np.asarray(lens)
+            dispatch_s = time.perf_counter() - t0
+        # cross-check replays are excluded from the latency histogram: they
+        # are a one-time-per-bucket guard, not steady-state dispatch cost
         if self.cross_check_masks and bucket not in self._checked_buckets:
             self._checked_buckets.add(bucket)
+            self.obs.inc(labeled("sched.cross_checks", kind="masks"))
             self._cross_check(bucket, batch, bounds, counts)
         if fps is not None:
-            fps, lens = np.asarray(fps), np.asarray(lens)
             if self.cross_check_fps and bucket not in self._fp_checked_buckets:
                 self._fp_checked_buckets.add(bucket)
+                self.obs.inc(labeled("sched.cross_checks", kind="fps"))
                 self._cross_check_fp(bucket, batch, bounds, counts, fps, lens)
             if (self.cross_check_pipeline
                     and bucket not in self._pipeline_checked_buckets):
                 self._pipeline_checked_buckets.add(bucket)
+                self.obs.inc(labeled("sched.cross_checks", kind="pipeline"))
                 self._cross_check_pipeline(bucket, batch, bounds, counts,
                                            fps, lens)
         self.stats.dispatches += 1
         self.stats.device_bytes += batch.size
         self.stats.padded_rows += rows - len(reqs)
+        self.obs.inc("sched.dispatches")
+        self.obs.inc("sched.device_bytes", batch.size)
+        self.obs.inc("sched.payload_bytes", payload)
+        self.obs.inc("sched.padded_rows", rows - len(reqs))
+        self.obs.observe(self._dispatch_hist, dispatch_s)
+        occ_name, waste_name, rows_name = self._bucket_names(bucket)
+        occ = payload / batch.size if batch.size else 0.0
+        self.obs.set_gauge(occ_name, occ)
+        self.obs.set_gauge(waste_name, 1.0 - occ)
+        self.obs.set_gauge(rows_name, len(reqs))
         for row, r in enumerate(reqs):
             self._ready.append((r.seq, self._exactify(
                 r, bounds[row, : counts[row]],
@@ -450,6 +503,7 @@ class ChunkScheduler:
         else:
             tail_rel = oracle.boundaries_numpy(req.data[s:], p)
             self.stats.tail_bytes += n - s
+            self.obs.inc("sched.tail_bytes", n - s)
             bounds = np.concatenate([padded[:kept].astype(np.int64), tail_rel + s])
         lengths = np.diff(np.concatenate([[0], bounds]))
         if padded_fps is None:

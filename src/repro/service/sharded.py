@@ -53,6 +53,7 @@ from __future__ import annotations
 import hashlib
 import json
 import os
+import time
 from collections import Counter
 from typing import List, Optional, Sequence
 
@@ -61,6 +62,7 @@ import numpy as np
 from repro.core.params import SeqCDCParams, derived_params
 from repro.dedup import BlockStore, DirBlockStore, FingerprintIndex
 from repro.dedup.dist_index import route_host, routed_fp_tables
+from repro.obs import MetricsRegistry, span
 
 from .api import (
     GCStats,
@@ -77,6 +79,7 @@ from .depot import pin_depot_shards, read_depot_shards, shard_roots
 from .objects import ObjectRecipe, RecipeTable
 from .scheduler import ChunkResult, ChunkScheduler
 from .transport.client import spawn_shard_servers
+from .transport.protocol import ShardTransportError
 from .writer import WriterPool
 
 TRANSPORTS = ("local", "remote")
@@ -133,9 +136,18 @@ class ShardedDedupService(ServiceBase):
             else [BlockStore() for _ in range(self.num_shards)]
         )
         self.recipes = recipes if recipes is not None else RecipeTable()
+        # one registry for the whole service: scheduler dispatches, writer
+        # queues, and client-side RPCs all report here; remote servers keep
+        # their own, aggregated live by :meth:`metrics`
+        self.obs = MetricsRegistry()
+        if self.transport == "remote":
+            for st in self.stores:
+                # RemoteShardClient contract: a settable .registry turns on
+                # its per-op rpc.client.* accounting
+                st.registry = self.obs
         # fingerprints are mandatory: they are the routing key
         self.scheduler = ChunkScheduler(
-            self.params, slots=slots, min_bucket=min_bucket,
+            self.params, registry=self.obs, slots=slots, min_bucket=min_bucket,
             mask_impl=mask_impl, step_impl=step_impl, fp_impl=fp_impl,
             pipeline_impl=pipeline_impl,
             with_fingerprints=True, cross_check_masks=cross_check_masks,
@@ -164,7 +176,8 @@ class ShardedDedupService(ServiceBase):
         )
         self.async_flush = bool(async_flush)
         self.writers = WriterPool(
-            self.num_shards, max_pending if self.async_flush else 0
+            self.num_shards, max_pending if self.async_flush else 0,
+            registry=self.obs,
         )
         # owner-local fingerprint indexes (the paper's estimator layer),
         # partitioned by the same rule as the stores
@@ -249,6 +262,13 @@ class ShardedDedupService(ServiceBase):
         # whatever drain() does — return results, or lose requests to a
         # device-side error — the submitted names are no longer pending, so
         # they must stop blocking resubmission
+        t0 = time.perf_counter()
+        with span("service.flush") as sp:
+            out = self._flush(sp)
+        self.obs.observe("service.flush_s", time.perf_counter() - t0)
+        return out
+
+    def _flush(self, sp) -> List[ObjectStat]:
         try:
             results = self.scheduler.drain()
         finally:
@@ -273,7 +293,10 @@ class ShardedDedupService(ServiceBase):
             staged.append((res, owners, keys))
         for shard, items in batches.items():
             for group in self._split_batches(items):
-                self.writers.submit(shard, self._put_blocks_task(shard, group))
+                self.writers.submit(
+                    shard, self._put_blocks_task(shard, group),
+                    nbytes=sum(c.size for _, _, c in group),
+                )
         self.writers.barrier()  # blocks are durable past this point
 
         out = []
@@ -292,8 +315,12 @@ class ShardedDedupService(ServiceBase):
             )
             self.recipes.add(recipe)
             out.append(ObjectStat.of(recipe))
+            self.obs.inc("ingest.objects")
+            self.obs.inc("ingest.bytes", res.size)
+            self.obs.inc("ingest.chunks", len(keys))
             if old is not None:
                 stale.extend(zip(self._recipe_shards(old), old.keys))
+        sp["objects"] = len(out)
         self._ingest_fps(results)
         self.sync()
         if stale:
@@ -372,7 +399,13 @@ class ShardedDedupService(ServiceBase):
         for s in range(self.num_shards):
             m = owners == s
             if m.any():
-                self.fp_index[s].add_batch(fps[m], lengths[m])
+                new = self.fp_index[s].add_batch(fps[m], lengths[m])
+                # estimator-level dup count (62-bit fp re-seen), the sharded
+                # analogue of the single-store exact ingest.dedup_hit_chunks;
+                # the exact per-shard truth lives in each remote server's
+                # store.dedup_hit_chunks
+                self.obs.inc("ingest.fp_dup_chunks",
+                             int(len(new) - np.count_nonzero(new)))
 
     def _mesh_ingest(self, fps: np.ndarray, lengths: np.ndarray) -> bool:
         """Route fp records through the all_to_all path into owner tables.
@@ -404,10 +437,12 @@ class ShardedDedupService(ServiceBase):
             flat = tables[s].reshape(-1, 3)
             valid = flat[:, 2] > 0
             if valid.any():
-                self.fp_index[s].add_batch(
+                new = self.fp_index[s].add_batch(
                     flat[valid, :2].astype(np.uint32),
                     flat[valid, 2].astype(np.int64),
                 )
+                self.obs.inc("ingest.fp_dup_chunks",
+                             int(len(new) - np.count_nonzero(new)))
         return True
 
     # -- serve ------------------------------------------------------------------
@@ -420,16 +455,24 @@ class ShardedDedupService(ServiceBase):
         of one per chunk — then spliced back into stream order.
         """
         r = self.recipes.get(name)
-        owners = self._recipe_shards(r)
-        by_shard: dict[int, List[int]] = {}
-        for i, shard in enumerate(owners):
-            by_shard.setdefault(shard, []).append(i)
-        parts: List[Optional[bytes]] = [None] * len(r.keys)
-        for shard, idxs in by_shard.items():
-            blocks = self.stores[shard].get_blocks([r.keys[i] for i in idxs])
-            for i, b in zip(idxs, blocks):
-                parts[i] = b
-        return verify_restore(r, b"".join(parts))  # type: ignore[arg-type]
+        t0 = time.perf_counter()
+        with span("service.get", object=name, bytes=r.size):
+            owners = self._recipe_shards(r)
+            by_shard: dict[int, List[int]] = {}
+            for i, shard in enumerate(owners):
+                by_shard.setdefault(shard, []).append(i)
+            parts: List[Optional[bytes]] = [None] * len(r.keys)
+            for shard, idxs in by_shard.items():
+                blocks = self.stores[shard].get_blocks(
+                    [r.keys[i] for i in idxs]
+                )
+                for i, b in zip(idxs, blocks):
+                    parts[i] = b
+            data = verify_restore(r, b"".join(parts))  # type: ignore[arg-type]
+        self.obs.observe("service.get_s", time.perf_counter() - t0)
+        self.obs.inc("restore.objects")
+        self.obs.inc("restore.bytes", r.size)
+        return data
 
     # -- delete / GC ------------------------------------------------------------
     def delete(self, name: str) -> int:
@@ -546,6 +589,22 @@ class ShardedDedupService(ServiceBase):
             batches=sched.dispatches,
             batch_occupancy=sched.occupancy,
         )
+
+    def _shard_metric_snapshots(self) -> List[Optional[dict]]:
+        """One live server-side snapshot per remote shard (the v2 ``metrics``
+        op); ``None`` for a shard whose server is unreachable, so one dead
+        server degrades the aggregate instead of failing :meth:`metrics`.
+        Local-transport shards have no server process and report nothing —
+        their writers/stores already count into the service registry."""
+        if self.transport != "remote":
+            return []
+        out: List[Optional[dict]] = []
+        for st in self.stores:
+            try:
+                out.append(st.metrics())
+            except (ShardTransportError, KeyError):
+                out.append(None)
+        return out
 
     def shard_stats(self) -> List[dict]:
         """Per-shard breakdown: balance of the fingerprint partition."""

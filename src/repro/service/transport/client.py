@@ -22,6 +22,13 @@ surfaces as ``AsyncWriteError`` at the writer barrier, *before* any recipe
 is committed; the depot is left in the orphan-blocks-only state the GC
 already knows how to repair (docs/SHARDING.md has the full kill matrix).
 
+Telemetry: when the owning service attaches its registry (``.registry``),
+every RPC is counted, timed, and blob-byte-accounted client-side
+(``rpc.client.*``, labeled by op) — mirroring the ``rpc.server.*`` metrics
+each server keeps, with identical byte semantics (payload blob only), so
+the two ends of the wire can be reconciled exactly.  :meth:`metrics`
+fetches a server's live snapshot via the v2 ``metrics`` op.
+
 ``ShardServerProcess`` spawns/stops the actual server processes; the
 service's ``open(root, N, transport="remote")`` uses it, and tests use its
 ``kill()`` for SIGKILL crash injection.
@@ -38,6 +45,8 @@ import threading
 import time
 from typing import Dict, List, Optional, Tuple
 
+from repro.obs import MetricsRegistry, labeled
+
 from . import protocol as P
 from .protocol import ShardTransportError
 
@@ -45,11 +54,15 @@ from .protocol import ShardTransportError
 class RemoteShardClient:
     """Store-shaped proxy for one shard server (see module docstring)."""
 
-    def __init__(self, host: str, port: int, *, timeout: float = 120.0):
+    def __init__(self, host: str, port: int, *, timeout: float = 120.0,
+                 registry: Optional[MetricsRegistry] = None):
         self.host, self.port = host, int(port)
         self._timeout = timeout
         self._lock = threading.Lock()
         self._dead: Optional[str] = None
+        #: owning service's registry; None → RPCs go uncounted.  Settable
+        #: after construction (the sharded service attaches its own).
+        self.registry = registry
         self._sock = socket.create_connection((host, self.port),
                                               timeout=timeout)
         self._sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
@@ -63,6 +76,11 @@ class RemoteShardClient:
         work scales with store size (a full GC sweep, a directory scan) —
         a slow-but-healthy server must not be declared dead mid-sweep.
         """
+        reg, opname = self.registry, P.OP_NAMES.get(op, str(op))
+        if reg is not None:
+            reg.inc(labeled("rpc.client.calls", op=opname))
+            reg.inc(labeled("rpc.client.send_bytes", op=opname), len(blob))
+        t0 = time.perf_counter()
         with self._lock:
             if self._dead is not None:
                 raise ShardTransportError(
@@ -76,6 +94,8 @@ class RemoteShardClient:
                 rop, rmeta, rblob = P.recv_frame(self._sock)
             except (OSError, P.ProtocolError) as e:
                 self._mark_dead(e)
+                if reg is not None:
+                    reg.inc(labeled("rpc.client.errors", op=opname))
                 raise ShardTransportError(
                     f"shard server {self.host}:{self.port} unreachable "
                     f"during {P.OP_NAMES.get(op, op)}: {e}"
@@ -83,6 +103,15 @@ class RemoteShardClient:
             finally:
                 if unbounded and self._dead is None:
                     self._sock.settimeout(self._timeout)
+        if reg is not None:
+            # latency includes lock wait: that's the caller-observed RPC
+            # cost when the writer and ingest threads contend for the
+            # single connection, which is exactly what we want visible
+            reg.observe(labeled("rpc.client.latency_s", op=opname),
+                        time.perf_counter() - t0)
+            reg.inc(labeled("rpc.client.recv_bytes", op=opname), len(rblob))
+            if rop == P.OP_ERROR:
+                reg.inc(labeled("rpc.client.errors", op=opname))
         if rop == P.OP_ERROR:
             P.raise_remote(rmeta)
         return rmeta, rblob
@@ -176,6 +205,11 @@ class RemoteShardClient:
     def ping(self) -> dict:
         meta, _ = self._rpc(P.OP_PING)
         return meta
+
+    def metrics(self) -> dict:
+        """Live server-side MetricsRegistry snapshot (v2 ``metrics`` op)."""
+        meta, _ = self._rpc(P.OP_METRICS)
+        return meta["metrics"]
 
     def shutdown(self):
         """Ask the server to sync and exit (the graceful stop path)."""

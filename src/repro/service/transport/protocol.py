@@ -24,7 +24,12 @@ deployments fail loudly at the first frame instead of corrupting a store.
 
 The op set is the full writer seam of the sharded service (the contract in
 docs/SHARDING.md): block puts/gets, release, manifest sync, recipe commit,
-stat/scan, mark-and-sweep GC, ping and shutdown.
+stat/scan, mark-and-sweep GC, ping and shutdown — plus ``metrics``, which
+returns the server's live :class:`~repro.obs.MetricsRegistry` snapshot so
+``ShardedDedupService.metrics()`` can aggregate per-shard-server telemetry
+(docs/OBSERVABILITY.md).  Adding ``metrics`` bumped ``VERSION`` to 2: a
+v1 peer fails loudly at the first frame instead of choking on an op it
+does not know.
 """
 from __future__ import annotations
 
@@ -34,7 +39,7 @@ import struct
 from typing import Optional, Tuple
 
 MAGIC = b"SCDC"
-VERSION = 1
+VERSION = 2  # v2: added OP_METRICS (live per-shard telemetry snapshots)
 
 #: header: magic, version, op, reserved, meta_len (u32), blob_len (u64)
 HEADER = struct.Struct("!4sBBHIQ")
@@ -54,6 +59,8 @@ OP_STAT = 7
 OP_GC_MARK = 8
 OP_GC_SWEEP = 9
 OP_SHUTDOWN = 10
+#: v2: server returns {"metrics": <MetricsRegistry.snapshot()>}
+OP_METRICS = 11
 #: response-only: remote op raised; meta = {"etype", "message"}
 OP_ERROR = 0xFF
 
@@ -68,6 +75,7 @@ OP_NAMES = {
     OP_GC_MARK: "gc_mark",
     OP_GC_SWEEP: "gc_sweep",
     OP_SHUTDOWN: "shutdown",
+    OP_METRICS: "metrics",
     OP_ERROR: "error",
 }
 

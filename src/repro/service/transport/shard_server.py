@@ -31,9 +31,21 @@ On startup the server prints ``SHARD_SERVER_READY port=<p> pid=<p>`` to
 stdout (after binding, so ``--port 0`` ephemeral ports are announced);
 spawners key on that line.  ``shutdown`` syncs the store and exits cleanly.
 
+Telemetry: every handled frame is counted, timed, and byte-accounted into
+a process-wide :class:`~repro.obs.MetricsRegistry` (``rpc.server.*``,
+labeled by op — the server-side mirror of the client's ``rpc.client.*``
+metrics), and the ``metrics`` op exports the live snapshot, which is how
+``ShardedDedupService.metrics()`` aggregates per-shard-server telemetry
+(docs/OBSERVABILITY.md).  Failed ops are logged to stderr with a
+structured one-line ``SHARD_SERVER_ERROR`` prefix (op name, shard root,
+pid, error type) followed by the traceback *before* the typed error frame
+is sent — so a server-side failure is diagnosable in the server's log,
+not only client-side.
+
 The module deliberately imports no jax: with the lazy package inits a shard
 server is a numpy+stdlib process, so spawning N of them costs process
-startup, not N accelerator-runtime initializations.
+startup, not N accelerator-runtime initializations (``repro.obs`` is
+stdlib-only by contract).
 """
 from __future__ import annotations
 
@@ -42,8 +54,11 @@ import os
 import socketserver
 import sys
 import threading
+import time
+import traceback
 
 from repro.dedup.store import DirBlockStore
+from repro.obs import MetricsRegistry, labeled, span
 from repro.service.objects import ObjectRecipe, RecipeTable
 
 from . import protocol as P
@@ -59,8 +74,17 @@ class _Handler(socketserver.BaseRequestHandler):
             except (ConnectionError, OSError):
                 return  # client went away: nothing to clean up, ops are atomic
             except P.ProtocolError as e:
+                shard.log_error("recv", e)
                 self._send_error(sock, e)
                 return  # stream offset untrusted past a framing error
+            opname = P.OP_NAMES.get(op, str(op))
+            # the server-side mirror of the client's rpc.client.* metrics:
+            # every received frame is counted and blob-byte-accounted (the
+            # two ends agree exactly — payload blob bytes, headers/meta
+            # excluded on both sides)
+            shard.registry.inc(labeled("rpc.server.calls", op=opname))
+            shard.registry.inc(labeled("rpc.server.recv_bytes", op=opname),
+                               len(blob))
             if op == P.OP_SHUTDOWN:
                 with shard.lock:
                     shard.store.sync()
@@ -72,12 +96,23 @@ class _Handler(socketserver.BaseRequestHandler):
                 self.server.shutdown()  # handler thread: unblocks serve_forever
                 return
             try:
-                with shard.lock:
-                    rmeta, rblob = shard.dispatch(op, meta, blob)
+                t0 = time.perf_counter()
+                with span("rpc.server", op=opname, recv_bytes=len(blob)):
+                    with shard.lock:
+                        rmeta, rblob = shard.dispatch(op, meta, blob)
+                shard.registry.observe(
+                    labeled("rpc.server.latency_s", op=opname),
+                    time.perf_counter() - t0,
+                )
+                shard.registry.inc(
+                    labeled("rpc.server.send_bytes", op=opname), len(rblob)
+                )
                 P.send_frame(sock, op, rmeta, rblob)
             except OSError:
                 return
             except BaseException as e:  # noqa: BLE001 — propagated to client
+                shard.registry.inc(labeled("rpc.server.errors", op=opname))
+                shard.log_error(opname, e)
                 self._send_error(sock, e)
 
     @staticmethod
@@ -102,9 +137,23 @@ class ShardServer:
         self.store = DirBlockStore(root)
         self.recipes = RecipeTable(os.path.join(root, "recipes.json"))
         self.lock = threading.RLock()
+        self.registry = MetricsRegistry()
         self._gc_live: dict[str, int] = {}
         self._tcp = _TCPServer((host, port), _Handler)
         self._tcp.shard = self  # type: ignore[attr-defined]
+
+    def log_error(self, opname: str, exc: BaseException):
+        """Structured one-line error prefix + traceback on stderr — the
+        server-side record of a failed op (the client sees only the typed
+        ``OP_ERROR`` frame; before this, failures were invisible here)."""
+        print(
+            f"SHARD_SERVER_ERROR op={opname} root={self.root} "
+            f"pid={os.getpid()} etype={type(exc).__name__}: {exc}",
+            file=sys.stderr, flush=True,
+        )
+        traceback.print_exception(type(exc), exc, exc.__traceback__,
+                                  file=sys.stderr)
+        sys.stderr.flush()
 
     @property
     def port(self) -> int:
@@ -135,8 +184,15 @@ class ShardServer:
             return {"ok": True, "root": self.root, "pid": os.getpid(),
                     "version": P.VERSION}, b""
         if op == P.OP_PUT_BLOCKS:
+            before = self.store.unique_chunks
             keys = [self.store.put(c)
                     for c in P.split_blob(blob, meta["sizes"])]
+            # hit = a put whose key was already stored (dedup did its job);
+            # measured by the unique-count delta so no extra hashing runs
+            self.registry.inc("store.put_chunks", len(keys))
+            self.registry.inc("store.put_bytes", len(blob))
+            self.registry.inc("store.dedup_hit_chunks",
+                              len(keys) - (self.store.unique_chunks - before))
             return {"keys": keys}, b""
         if op == P.OP_GET_BLOCKS:
             blocks = self.store.get_blocks(meta["keys"])  # KeyError crosses typed
@@ -167,6 +223,8 @@ class ShardServer:
             for k, v in meta.get("live", {}).items():
                 self._gc_live[k] = self._gc_live.get(k, 0) + int(v)
             return {"marked": len(self._gc_live)}, b""
+        if op == P.OP_METRICS:
+            return {"metrics": self.registry.snapshot()}, b""
         if op == P.OP_GC_SWEEP:
             freed_blocks, freed_bytes, repaired = self.store.sweep(
                 self._gc_live

@@ -22,12 +22,23 @@ the next :meth:`barrier`/:meth:`close` on the ingest thread — a failed
 block write therefore aborts the flush *before* any recipe is committed,
 which is the same orphan-blocks-never-dangling-recipes guarantee the sync
 path has.
+
+Every writer reports into a :class:`~repro.obs.MetricsRegistry`
+(docs/OBSERVABILITY.md): queue depth gauge, backpressure stall-time
+counter (seconds ``submit`` spent blocked on a full queue), per-task flush
+latency histogram, flushed-byte and error counters — all labeled by shard.
+Metrics outlive a failed flush: the error is consumed at the barrier but
+the counters keep counting, so backpressure and failure rates stay
+observable across retries.
 """
 from __future__ import annotations
 
 import queue
 import threading
+import time
 from typing import Callable, List, Optional
+
+from repro.obs import MetricsRegistry, labeled, span
 
 _STOP = object()
 
@@ -42,16 +53,42 @@ class ShardWriter:
     ``max_pending <= 0`` selects synchronous mode: ``submit`` runs the task
     inline and ``barrier`` is a no-op — same interface, no thread, used for
     the sync-flush configuration and as the degenerate 1-shard case.
+    ``shard`` labels this writer's metrics; ``registry`` is the owning
+    service's (a bare writer gets its own).
     """
 
-    def __init__(self, max_pending: int = 256, name: str = "shard-writer"):
+    def __init__(self, max_pending: int = 256, name: str = "shard-writer",
+                 registry: Optional[MetricsRegistry] = None, shard: int = 0):
         self.async_mode = max_pending > 0
         self._err: Optional[BaseException] = None
+        self.obs = registry if registry is not None else MetricsRegistry()
+        self._m_depth = labeled("writer.queue_depth", shard=shard)
+        self._m_stall = labeled("writer.stall_s", shard=shard)
+        self._m_tasks = labeled("writer.tasks", shard=shard)
+        self._m_task_s = labeled("writer.task_s", shard=shard)
+        self._m_bytes = labeled("writer.flushed_bytes", shard=shard)
+        self._m_errors = labeled("writer.task_errors", shard=shard)
         if not self.async_mode:
             return
         self._q: queue.Queue = queue.Queue(maxsize=max_pending)
         self._thread = threading.Thread(target=self._loop, name=name, daemon=True)
         self._thread.start()
+
+    def _run_task(self, fn: Callable[[], None], nbytes: int):
+        """Execute one task with timing/accounting; captures the first
+        error (re-raised at the barrier) and counts every failure."""
+        t0 = time.perf_counter()
+        try:
+            if self._err is None:  # fail fast: drop work after an error
+                with span("writer.task", bytes=nbytes):
+                    fn()
+                self.obs.inc(self._m_bytes, nbytes)
+        except BaseException as e:  # noqa: BLE001 — re-raised at barrier
+            self._err = e
+            self.obs.inc(self._m_errors)
+        finally:
+            self.obs.inc(self._m_tasks)
+            self.obs.observe(self._m_task_s, time.perf_counter() - t0)
 
     def _loop(self):
         while True:
@@ -60,28 +97,35 @@ class ShardWriter:
                 self._q.task_done()
                 return
             try:
-                if self._err is None:  # fail fast: drop work after an error
-                    task()
-            except BaseException as e:  # noqa: BLE001 — re-raised at barrier
-                self._err = e
+                self._run_task(*task)
             finally:
                 self._q.task_done()
 
-    def submit(self, fn: Callable[[], None]):
-        """Queue one write; blocks when the queue is full (backpressure)."""
+    def submit(self, fn: Callable[[], None], nbytes: int = 0):
+        """Queue one write; blocks when the queue is full (backpressure).
+
+        ``nbytes`` is the task's payload size, counted into the shard's
+        ``writer.flushed_bytes`` when the task succeeds.
+        """
         if not self.async_mode:
-            if self._err is None:
-                try:
-                    fn()
-                except BaseException as e:  # noqa: BLE001
-                    self._err = e
+            self._run_task(fn, nbytes)
             return
-        self._q.put(fn)
+        if self._q.full():
+            # backpressure stall: the producer is now blocked until the
+            # worker frees a slot — that wait is the metric, not the
+            # uncontended enqueue cost (which is sub-microsecond)
+            t0 = time.perf_counter()
+            self._q.put((fn, nbytes))
+            self.obs.inc(self._m_stall, time.perf_counter() - t0)
+        else:
+            self._q.put((fn, nbytes))
+        self.obs.set_gauge(self._m_depth, self._q.qsize())
 
     def barrier(self):
         """Wait until every submitted write ran; re-raise the first failure."""
         if self.async_mode:
             self._q.join()
+            self.obs.set_gauge(self._m_depth, 0)
         if self._err is not None:
             err, self._err = self._err, None
             raise AsyncWriteError("store write failed during flush") from err
@@ -99,14 +143,17 @@ class ShardWriter:
 class WriterPool:
     """Per-shard :class:`ShardWriter` fan-out with a pool-wide barrier."""
 
-    def __init__(self, num_shards: int, max_pending: int = 256):
+    def __init__(self, num_shards: int, max_pending: int = 256,
+                 registry: Optional[MetricsRegistry] = None):
+        self.obs = registry if registry is not None else MetricsRegistry()
         self.writers: List[ShardWriter] = [
-            ShardWriter(max_pending, name=f"shard-writer-{s}")
+            ShardWriter(max_pending, name=f"shard-writer-{s}",
+                        registry=self.obs, shard=s)
             for s in range(num_shards)
         ]
 
-    def submit(self, shard: int, fn: Callable[[], None]):
-        self.writers[shard].submit(fn)
+    def submit(self, shard: int, fn: Callable[[], None], nbytes: int = 0):
+        self.writers[shard].submit(fn, nbytes)
 
     def barrier(self):
         """Block until all shards drained; raise the first captured error."""

@@ -1,0 +1,320 @@
+"""repro.obs + its wiring: registry math, tracing, end-to-end telemetry.
+
+Covers the observability contract (docs/OBSERVABILITY.md):
+
+* registry units — counter/gauge/histogram arithmetic, log-bucket
+  resolution, label rendering, snapshot merging;
+* tracing — off by default and free, JSONL records when ``REPRO_TRACE``
+  names a file, and *bit-identical results* with tracing on;
+* layer wiring — scheduler dispatch metrics, service ingest/restore
+  counters, writer metrics through a real flush;
+* the wire — a remote sharded service's ``metrics()`` aggregates live
+  per-server snapshots whose RPC counts and byte totals agree exactly
+  with the client side, op by op.
+"""
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.core.params import SeqCDCParams
+from repro.obs import (
+    BUCKETS_PER_OCTAVE,
+    MetricsRegistry,
+    bucket_index,
+    bucket_value,
+    enabled,
+    labeled,
+    merge_snapshots,
+    span,
+)
+from repro.service import DedupService, ShardedDedupService
+
+P = SeqCDCParams(avg_size=256, seq_length=3, skip_trigger=6, skip_size=32,
+                 min_size=64, max_size=512)
+
+
+def _mk_service(**kw):
+    return DedupService(params=P, slots=4, min_bucket=1024, **kw)
+
+
+def _corpus(rng, n=60000):
+    data = rng.integers(0, 256, n, dtype=np.uint8)
+    return [data, np.concatenate([data[: n // 2], data[: n // 2]])]
+
+
+# -- registry units -------------------------------------------------------------
+class TestRegistry:
+    def test_counters_and_gauges(self):
+        r = MetricsRegistry()
+        r.inc("c")
+        r.inc("c", 4)
+        r.set_gauge("g", 2)
+        r.set_gauge("g", 9)  # last write wins
+        assert r.counter("c") == 5
+        assert r.gauge("g") == 9
+        assert r.counter("missing") == 0
+        assert r.gauge("missing", 7.5) == 7.5
+
+    def test_bucket_roundtrip_resolution(self):
+        # geometric buckets: the representative value of any value's bucket
+        # is within half an octave step (~9%) of the value
+        ratio = 2.0 ** (1.0 / BUCKETS_PER_OCTAVE)
+        for v in (1e-6, 0.003, 0.5, 1.0, 7.0, 1234.5):
+            rep = bucket_value(bucket_index(v))
+            assert rep / v < ratio ** 0.5 + 1e-9
+            assert v / rep < ratio ** 0.5 + 1e-9
+        assert bucket_value(bucket_index(0.0)) == 0.0
+        assert bucket_value(bucket_index(-3.0)) == 0.0
+
+    def test_histogram_percentiles(self):
+        r = MetricsRegistry()
+        for _ in range(98):
+            r.observe("h", 0.001)
+        r.observe("h", 1.0)
+        r.observe("h", 2.0)
+        h = r.snapshot()["histograms"]["h"]
+        assert h["count"] == 100
+        assert h["min"] == 0.001 and h["max"] == 2.0
+        assert 0.0009 < h["p50"] < 0.0011
+        assert 0.0009 < h["p95"] < 0.0011
+        assert 0.9 < h["p99"] < 1.1
+        assert h["sum"] == pytest.approx(98 * 0.001 + 3.0)
+
+    def test_time_context_manager(self):
+        r = MetricsRegistry()
+        with r.time("t_s"):
+            pass
+        h = r.snapshot()["histograms"]["t_s"]
+        assert h["count"] == 1 and h["max"] < 1.0
+
+    def test_labeled_rendering(self):
+        assert labeled("x") == "x"
+        assert labeled("x", shard=3, op="put") == "x{op=put,shard=3}"
+        # sorted keys: the same labels always render the same string
+        assert labeled("x", b=1, a=2) == labeled("x", a=2, b=1) == "x{a=2,b=1}"
+
+    def test_merge_snapshots(self):
+        r = MetricsRegistry()
+        r.inc("n", 3)
+        r.set_gauge("depth", 2)
+        r.observe("h", 0.5)
+        r.observe("h", 4.0)
+        s = r.snapshot()
+        m = merge_snapshots([s, s, None])  # None = unreachable shard
+        assert m["counters"]["n"] == 6
+        assert m["gauges"]["depth"] == 4  # gauges sum (fleet backlog)
+        assert m["histograms"]["h"]["count"] == 4
+        assert m["histograms"]["h"]["min"] == 0.5
+        assert m["histograms"]["h"]["max"] == 4.0
+        # merged quantiles come from the union's buckets, not an average
+        assert m["histograms"]["h"]["p99"] == pytest.approx(
+            s["histograms"]["h"]["p99"])
+
+    def test_clear(self):
+        r = MetricsRegistry()
+        r.inc("a")
+        r.observe("b", 1)
+        r.clear()
+        snap = r.snapshot()
+        assert snap["counters"] == {} and snap["histograms"] == {}
+
+    def test_snapshot_json_serializable(self):
+        r = MetricsRegistry()
+        r.inc("a", 2)
+        r.observe("b", 0.25)
+        json.dumps(r.snapshot())  # must not raise
+
+
+# -- tracing --------------------------------------------------------------------
+class TestTracing:
+    def test_off_by_default_and_null_span(self, monkeypatch):
+        monkeypatch.delenv("REPRO_TRACE", raising=False)
+        assert not enabled()
+        sp = span("x", a=1)
+        with sp as s:
+            s["b"] = 2  # attrs on the null span are dropped, not errors
+        assert span("y") is span("z")  # the shared no-op instance
+
+    def test_jsonl_records(self, tmp_path, monkeypatch):
+        trace = tmp_path / "t.jsonl"
+        monkeypatch.setenv("REPRO_TRACE", str(trace))
+        assert enabled()
+        with span("unit.work", bytes=64) as sp:
+            sp["rows"] = 3
+        with pytest.raises(ValueError):
+            with span("unit.fail"):
+                raise ValueError("boom")
+        recs = [json.loads(l) for l in trace.read_text().splitlines()]
+        assert [r["name"] for r in recs] == ["unit.work", "unit.fail"]
+        ok = recs[0]
+        assert ok["bytes"] == 64 and ok["rows"] == 3
+        assert ok["wall_s"] >= 0 and ok["cpu_s"] >= 0
+        assert ok["pid"] == os.getpid()
+        assert recs[1]["error"] == "ValueError"
+
+    def test_tracing_does_not_change_results(self, rng, tmp_path, monkeypatch):
+        """The acceptance contract: same stores, same restored bytes,
+        tracing on vs off."""
+        corpus = _corpus(rng)
+
+        def run():
+            svc = _mk_service()
+            for i, v in enumerate(corpus):
+                svc.submit(f"o{i}", v)
+            svc.flush()
+            st = svc.stats()
+            return ([svc.get(f"o{i}") for i in range(len(corpus))],
+                    st.stored_bytes, st.unique_chunks)
+
+        monkeypatch.delenv("REPRO_TRACE", raising=False)
+        base = run()
+        monkeypatch.setenv("REPRO_TRACE", str(tmp_path / "t.jsonl"))
+        assert run() == base
+        names = {json.loads(l)["name"]
+                 for l in (tmp_path / "t.jsonl").read_text().splitlines()}
+        assert {"sched.dispatch", "service.flush", "service.get"} <= names
+
+
+# -- layer wiring ---------------------------------------------------------------
+class TestServiceMetrics:
+    def test_ingest_and_restore_counters(self, rng):
+        svc = _mk_service()
+        corpus = _corpus(rng)
+        total = sum(int(v.size) for v in corpus)
+        for i, v in enumerate(corpus):
+            svc.submit(f"o{i}", v)
+        svc.flush()
+        svc.get("o0")
+        m = svc.metrics()
+        c = m["service"]["counters"]
+        assert c["ingest.objects"] == len(corpus)
+        assert c["ingest.bytes"] == total
+        assert c["ingest.chunks"] > 0
+        # corpus[1] is half-repeated, so hits must exist
+        assert 0 < c["ingest.dedup_hit_chunks"] < c["ingest.chunks"]
+        assert c["restore.objects"] == 1
+        assert c["restore.bytes"] == int(corpus[0].size)
+        assert m["shards"] == [] and m["aggregate"] is None
+
+    def test_scheduler_dispatch_metrics(self, rng):
+        svc = _mk_service()
+        svc.put("a", rng.integers(0, 256, 50000, dtype=np.uint8))
+        snap = svc.metrics()["service"]
+        assert snap["counters"]["sched.dispatches"] >= 1
+        assert snap["counters"]["sched.device_bytes"] >= 50000
+        hname = labeled("sched.dispatch_s", pipeline=svc.scheduler.pipeline_impl,
+                        mask=svc.scheduler.mask_impl, fp=svc.scheduler.fp_impl)
+        h = snap["histograms"][hname]
+        assert h["count"] == snap["counters"]["sched.dispatches"]
+        occ = [g for g in snap["gauges"] if g.startswith("sched.occupancy{")]
+        assert occ, "no per-bucket occupancy gauge was set"
+        assert all(0 < snap["gauges"][g] <= 1 for g in occ)
+
+    def test_flush_and_get_latency_histograms(self, rng):
+        svc = _mk_service()
+        svc.put("a", rng.integers(0, 256, 30000, dtype=np.uint8))
+        svc.get("a")
+        hists = svc.metrics()["service"]["histograms"]
+        assert hists["service.flush_s"]["count"] == 1
+        assert hists["service.get_s"]["count"] == 1
+
+    def test_registries_are_per_service(self, rng):
+        a, b = _mk_service(), _mk_service()
+        a.put("x", rng.integers(0, 256, 20000, dtype=np.uint8))
+        assert a.obs.counter("ingest.objects") == 1
+        assert b.obs.counter("ingest.objects") == 0
+
+    def test_sharded_local_metrics(self, rng):
+        svc = ShardedDedupService(2, params=P, slots=4, min_bucket=1024)
+        try:
+            corpus = _corpus(rng)
+            for i, v in enumerate(corpus):
+                svc.submit(f"o{i}", v)
+            svc.flush()
+            svc.get("o0")
+            m = svc.metrics()
+            c = m["service"]["counters"]
+            assert c["ingest.objects"] == len(corpus)
+            assert c["ingest.fp_dup_chunks"] > 0  # the repeated half
+            # writer metrics are labeled per shard and both shards wrote
+            wrote = [s for s in range(2)
+                     if c.get(labeled("writer.tasks", shard=s), 0) > 0]
+            assert wrote == [0, 1]
+            assert m["shards"] == []  # local transport: no server processes
+        finally:
+            svc.close()
+
+
+# -- the wire -------------------------------------------------------------------
+@pytest.mark.timeout(120)
+class TestRemoteMetrics:
+    def test_metrics_op_and_client_server_agreement(self, rng, tmp_path):
+        """The acceptance test: ``metrics()`` on a remote sharded service
+        returns live per-shard-server snapshots, and the client- and
+        server-side RPC counters agree exactly, op by op — calls, and the
+        symmetric blob-byte accounting."""
+        svc = ShardedDedupService.open(str(tmp_path / "depot"), 2,
+                                       transport="remote", params=P,
+                                       slots=4, min_bucket=1024)
+        try:
+            corpus = _corpus(rng)
+            for i, v in enumerate(corpus):
+                svc.submit(f"o{i}", v)
+            svc.flush()
+            for i in range(len(corpus)):
+                svc.get(f"o{i}")
+            m = svc.metrics()
+            assert len(m["shards"]) == 2
+            assert all(s is not None for s in m["shards"])
+            cc = m["service"]["counters"]
+            sc = m["aggregate"]["counters"]
+            pairs = [("rpc.client.calls{", "rpc.server.calls{"),
+                     ("rpc.client.send_bytes{", "rpc.server.recv_bytes{"),
+                     ("rpc.client.recv_bytes{", "rpc.server.send_bytes{")]
+            checked = 0
+            for k, v in cc.items():
+                for mine, theirs in pairs:
+                    if not k.startswith(mine):
+                        continue
+                    if mine == "rpc.client.recv_bytes{" and "op=metrics" in k:
+                        # a snapshot is taken *inside* the metrics dispatch,
+                        # so it cannot include its own response bytes
+                        continue
+                    assert sc.get(theirs + k[len(mine):]) == v, k
+                    checked += 1
+            assert checked >= 6  # at least put_blocks/get_blocks/metrics
+            # real traffic flowed both ways
+            assert cc[labeled("rpc.client.calls", op="put_blocks")] >= 2
+            assert cc[labeled("rpc.client.send_bytes", op="put_blocks")] > 0
+            assert cc[labeled("rpc.client.recv_bytes", op="get_blocks")] > 0
+            # server-side exact dedup hits: corpus[1]'s repeated half
+            assert sc["store.dedup_hit_chunks"] > 0
+            # per-op server latency histograms exist for the hot ops
+            assert m["aggregate"]["histograms"][
+                labeled("rpc.server.latency_s", op="put_blocks")]["count"] >= 2
+        finally:
+            svc.close()
+
+    def test_dead_server_degrades_to_none(self, rng, tmp_path):
+        svc = ShardedDedupService.open(str(tmp_path / "depot"), 2,
+                                       transport="remote", params=P,
+                                       slots=4, min_bucket=1024)
+        try:
+            svc.put("x", rng.integers(0, 256, 20000, dtype=np.uint8))
+            svc._servers[1].kill()
+            m = svc.metrics()
+            assert m["shards"][0] is not None
+            assert m["shards"][1] is None
+            # aggregate still builds from the reachable shard
+            assert m["aggregate"]["counters"]
+        finally:
+            svc.close()
+
+    def test_protocol_rejects_version_mismatch(self):
+        # OP_METRICS shipped with VERSION 2: a v1 peer must fail loudly at
+        # the first frame, not choke on an unknown op mid-stream
+        from repro.service.transport import protocol as proto
+        assert proto.VERSION == 2
+        assert proto.OP_NAMES[proto.OP_METRICS] == "metrics"

@@ -6,7 +6,11 @@ The contract under load and under failure:
   never buffers unboundedly;
 * a failed store write surfaces as ``AsyncWriteError`` at the barrier,
   *before* any recipe commit or manifest sync runs, with the submitted
-  names un-stranded (resubmission works).
+  names un-stranded (resubmission works);
+* both states are *observable*: the queue-depth gauge and stall-time
+  counter move while the FIFO is full, and the writer metrics survive a
+  failed flush (the error is consumed at the barrier, the counters are
+  not — docs/OBSERVABILITY.md).
 """
 import threading
 import time
@@ -15,6 +19,7 @@ import numpy as np
 import pytest
 
 from repro.core.params import SeqCDCParams
+from repro.obs import labeled
 from repro.service import (
     AsyncWriteError,
     ShardedDedupService,
@@ -52,6 +57,64 @@ def test_full_fifo_blocks_producer_and_drops_nothing():
     t.join(10)
     w.barrier()
     assert ran == [0, 1, 2, 3]  # FIFO, all four ran, none dropped
+    w.close()
+
+
+def test_backpressure_moves_queue_depth_gauge_and_stall_counter():
+    """While the FIFO is full: the depth gauge reads max_pending, and the
+    blocked submit's wait lands in the stall-time counter; after the
+    barrier the gauge reads 0 and the flushed-bytes counter has every
+    payload byte."""
+    w = ShardWriter(max_pending=2, shard=0)
+    depth = labeled("writer.queue_depth", shard=0)
+    stall = labeled("writer.stall_s", shard=0)
+    gate = threading.Event()
+    started = threading.Event()
+    w.submit(lambda: (started.set(), gate.wait(30)), nbytes=10)
+    assert started.wait(10)  # worker busy; queue empty
+    w.submit(lambda: None, nbytes=10)
+    w.submit(lambda: None, nbytes=10)  # queue now at max_pending
+    assert w.obs.gauge(depth) == 2
+    assert w.obs.counter(stall) == 0  # nothing has blocked yet
+
+    depth_seen = []
+
+    def producer():
+        w.submit(lambda: depth_seen.append(w.obs.gauge(depth)), nbytes=10)
+
+    t = threading.Thread(target=producer, daemon=True)
+    t.start()
+    time.sleep(0.3)  # producer is now blocked inside submit
+    gate.set()
+    t.join(10)
+    w.barrier()
+    assert w.obs.counter(stall) >= 0.1, "blocked submit's wait not counted"
+    assert w.obs.gauge(depth) == 0, "barrier must reset the depth gauge"
+    assert w.obs.counter(labeled("writer.tasks", shard=0)) == 4
+    assert w.obs.counter(labeled("writer.flushed_bytes", shard=0)) == 40
+    w.close()
+
+
+def test_writer_metrics_survive_failed_flush():
+    """A failed task is counted (task_errors, tasks) and the error is
+    consumed at the barrier — but the registry keeps counting across the
+    failure, so retries accumulate into the same counters."""
+    w = ShardWriter(max_pending=4, shard=3)
+    w.submit(lambda: None, nbytes=100)
+    w.submit(lambda: (_ for _ in ()).throw(OSError("disk gone")), nbytes=50)
+    with pytest.raises(AsyncWriteError):
+        w.barrier()
+    assert w.obs.counter(labeled("writer.task_errors", shard=3)) == 1
+    assert w.obs.counter(labeled("writer.tasks", shard=3)) == 2
+    # the failed task's bytes never flushed
+    assert w.obs.counter(labeled("writer.flushed_bytes", shard=3)) == 100
+    # the writer keeps working and counting after the consumed error
+    w.submit(lambda: None, nbytes=7)
+    w.barrier()
+    assert w.obs.counter(labeled("writer.flushed_bytes", shard=3)) == 107
+    assert w.obs.counter(labeled("writer.tasks", shard=3)) == 3
+    hist = w.obs.snapshot()["histograms"][labeled("writer.task_s", shard=3)]
+    assert hist["count"] == 3
     w.close()
 
 
