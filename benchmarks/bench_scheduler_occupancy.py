@@ -12,10 +12,17 @@ reports what the batching actually delivers:
                         (``SchedulerStats.occupancy``);
 * ``pad_waste_pct``   — the complement: % of device bytes that were padding
                         (length padding within rows + zero rows);
-* ``row_fill``        — dispatched rows that carried a request (the rest
-                        were zero rows squaring off partial buckets);
+* ``row_fill``        — dispatched rows that carried a request (from
+                        ``SchedulerStats.device_rows``; partial batches no
+                        longer ship zero rows, so this is 1.0 unless a
+                        regression reintroduces them);
 * ``buckets``/``dispatches``/``tail_pct`` — compiled-shape count, device
                         batches, and the host-side exact-tail fraction.
+
+Every distribution runs under both ``packing_impl`` modes: ``off`` is the
+pure length-bucket baseline, ``segments`` shelf-packs sub-``min_bucket``
+streams into shared rows — the knob that rescues the ``all_tiny`` mix from
+the min-bucket floor (a ~0.03 occupancy baseline) to near-full rows.
 
 Chunking math is identical across rows (same params, same two-phase
 pipeline); only the arrival-length distribution varies, so any occupancy
@@ -77,37 +84,42 @@ def run(budget: str = "small") -> list:
     total = {"quick": 2, "small": 8}.get(budget, 32) * common.MiB
     params = derived_params(8192)
     rows = []
-    for name, draw in DISTRIBUTIONS.items():
-        rng = np.random.default_rng(17)
-        lengths = _lengths(draw, total, rng)
-        # fingerprints off: occupancy is a property of batching, and the
-        # fp pass only dilutes the signal with unrelated device time
-        sched = ChunkScheduler(params, slots=8, mask_impl=MASK_IMPL,
-                               step_impl=STEP_IMPL, with_fingerprints=False)
-        payload = rng.integers(0, 256, int(sum(lengths)), dtype=np.uint8)
-        off = 0
-        for n in lengths:
-            sched.submit(payload[off:off + n])
-            off += n
-        results = sched.drain()
-        assert len(results) == len(lengths)
-        st = sched.stats
-        dispatched_rows = st.padded_rows + len(lengths)
-        rows.append({
-            "budget": budget,
-            "dist": name,
-            "streams": len(lengths),
-            "stream_mb": st.stream_bytes / common.MiB,
-            "device_mb": st.device_bytes / common.MiB,
-            "occupancy": st.occupancy,
-            "pad_waste_pct": 100.0 * (1.0 - st.occupancy),
-            "row_fill": len(lengths) / dispatched_rows,
-            "dispatches": st.dispatches,
-            "buckets": len(sched._jit_cache),
-            "tail_pct": 100.0 * st.tail_bytes / max(1, st.stream_bytes),
-            "mask_impl": MASK_IMPL,
-            "step_impl": STEP_IMPL,
-        })
+    for packing_impl in ("off", "segments"):
+        for name, draw in DISTRIBUTIONS.items():
+            rng = np.random.default_rng(17)
+            lengths = _lengths(draw, total, rng)
+            # fingerprints off: occupancy is a property of batching, and the
+            # fp pass only dilutes the signal with unrelated device time
+            sched = ChunkScheduler(params, slots=8, mask_impl=MASK_IMPL,
+                                   step_impl=STEP_IMPL,
+                                   packing_impl=packing_impl,
+                                   with_fingerprints=False)
+            payload = rng.integers(0, 256, int(sum(lengths)), dtype=np.uint8)
+            off = 0
+            for n in lengths:
+                sched.submit(payload[off:off + n])
+                off += n
+            results = sched.drain()
+            assert len(results) == len(lengths)
+            st = sched.stats
+            rows.append({
+                "budget": budget,
+                "dist": name,
+                "packing_impl": packing_impl,
+                "streams": len(lengths),
+                "stream_mb": st.stream_bytes / common.MiB,
+                "device_mb": st.device_bytes / common.MiB,
+                "occupancy": st.occupancy,
+                "pad_waste_pct": 100.0 * (1.0 - st.occupancy),
+                "row_fill": ((st.device_rows - st.padded_rows)
+                             / max(1, st.device_rows)),
+                "packed_streams": st.packed_streams,
+                "dispatches": st.dispatches,
+                "buckets": len(sched._jit_cache),
+                "tail_pct": 100.0 * st.tail_bytes / max(1, st.stream_bytes),
+                "mask_impl": MASK_IMPL,
+                "step_impl": STEP_IMPL,
+            })
     common.emit(rows, "scheduler occupancy: adversarial length mixes")
     return rows
 

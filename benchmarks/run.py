@@ -100,7 +100,8 @@ QUICK_MODULES = [
 
 #: configuration every benchmark uses unless its rows say otherwise
 DEFAULTS = {"mask_impl": "jnp", "step_impl": "wide", "fp_impl": "reference",
-            "pipeline_impl": "split", "shards": 1, "transport": "local"}
+            "pipeline_impl": "split", "packing_impl": "off", "shards": 1,
+            "transport": "local"}
 
 
 def main() -> None:

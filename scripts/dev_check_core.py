@@ -2,7 +2,9 @@
 fused Pallas fingerprint kernel (CPU interpret mode) is bit-identical to
 the numpy reference over the same case sweep, and the fused single-dispatch
 chunk+fingerprint pipeline kernel is bit-identical to the composed split
-path (pipeline_impl="fused" vs "split") over the same cases."""
+path (pipeline_impl="fused" vs "split") over the same cases, and packed
+multi-segment rows (packing_impl="segments") chunk bit-identically to
+per-segment rows on both the split and fused paths."""
 import os
 import sys
 
@@ -94,6 +96,50 @@ for params in [small, paper_params(8192)]:
                 print(f"[fused-pipeline] params={params.avg_size} case{i} "
                       f"n={d.size}: {part} != split reference")
                 fail += 1
+
+# packing parity: a packed multi-segment row (segment-reset automaton,
+# split and fused paths) must chunk bit-identically to running every
+# segment as its own row — bounds, counts, fps, and lengths
+for params in [small, paper_params(8192)]:
+    segss = [
+        [cases[6], cases[5][:1], np.zeros(300, np.uint8), cases[7][:500]],
+        [np.zeros(1, np.uint8)] * 5 + [cases[8][:900]],
+    ]
+    for i, segs in enumerate(segss):
+        S = 4096
+        total = sum(s.size for s in segs)
+        assert total <= S
+        data = np.zeros(S, np.uint8)
+        sep = np.full(S, total, np.int32)
+        ends = np.zeros(len(segs), np.int32)
+        off = 0
+        for gi, s in enumerate(segs):
+            data[off:off + s.size] = s
+            sep[off:off + s.size] = off + s.size
+            ends[gi] = off + s.size
+            off += s.size
+        mc = S // params.min_size + 2 * len(segs) + 2
+        want = kernel_ref.packed_pipeline(
+            data[None], [[s.size for s in segs]], params, max_chunks=mc)
+        for label, got in [
+            ("fused", kernel_ops.packed_pipeline(
+                jnp.asarray(data)[None], jnp.asarray(sep)[None],
+                jnp.asarray(ends)[None], params, max_chunks=mc)),
+        ]:
+            for w, g, part in zip(want, got,
+                                  ("bounds", "counts", "fps", "lens")):
+                if not np.array_equal(np.asarray(w), np.asarray(g)):
+                    print(f"[packed-{label}] params={params.avg_size} "
+                          f"mix{i}: {part} != per-segment reference")
+                    fail += 1
+        sb, sc = seqcdc.boundaries_packed_batch(
+            jnp.asarray(data)[None], jnp.asarray(sep)[None],
+            jnp.asarray(ends)[None], params, max_chunks=mc)
+        if not (np.array_equal(np.asarray(sb), want[0])
+                and np.array_equal(np.asarray(sc), want[1])):
+            print(f"[packed-split] params={params.avg_size} mix{i}: "
+                  f"bounds/counts != per-segment reference")
+            fail += 1
 
 print("FAILURES:", fail)
 sys.exit(1 if fail else 0)

@@ -130,6 +130,148 @@ def _scan_wide(candb, oppb, n, p: SeqCDCParams):
     return emits, bounds
 
 
+def _scan_wide_packed(candb, oppb, ends, n_row, p: SeqCDCParams,
+                      max_chunks: int):
+    """Packed-row variant of ``_scan_wide``: many streams share one row.
+
+    The scan state carries a fourth register ``se`` — the end offset of the
+    segment the position currently walks — and every ``_resolve`` call sees
+    ``se`` where the unpacked scan sees ``n``: the max-size/file-end cut of
+    stream ``i`` consults stream ``i``'s end, nothing later.  When an emitted
+    bound lands *on* the segment end, ``se`` advances to the next entry of
+    ``ends`` and the registers the emit leaves behind (``s = bound``,
+    ``k = bound + sub_min_skip``, ``c = 0``) are exactly the init state a
+    per-stream run would start the next segment with — the segment reset is
+    the emit itself, no extra state.
+
+    Cross-segment leakage cannot happen even though the bitmaps are one
+    row-wide vector: the caller clips candidate bits to ``pos <= end - L``
+    and opposing bits to ``pos < end - 1`` of *their own* segment, and any
+    in-block event position belonging to a later segment sits at or past
+    ``se`` while the current segment's cut position ``cut_k`` sits strictly
+    before it — ``_resolve`` resolves ties cut-first, so the segment-end cut
+    always fires before a later segment's bit can be consumed.  A no-event
+    block never contains the live segment's end (the cut would have fired),
+    so the opposing-counter carry ``c`` stays segment-pure too.
+
+    Unlike the unpacked scan, one block can host *several* events: with a
+    run of tiny segments, each segment-end cut resets the scan position
+    just past its own end — arbitrarily many cuts inside one block.  The
+    unpacked one-event-per-block invariant
+    (``W <= min(skip_size, min_size - L)``) only holds when every reset
+    jumps a full ``sub_min_skip``, so each block re-resolves until the scan
+    position clears it (every pass either emits a strictly larger bound or
+    stops: the inner loop terminates).  Emitted bounds are scattered into
+    the carried output directly, as block-level emit slots no longer
+    suffice.
+
+    The post-emit scan position is *clamped* to the next pending cut
+    position ``se' - (L-1)``: the min-size skip assumes at least
+    ``min_size`` bytes remain in the segment, which a tiny next segment
+    violates — unclamped, the scan position can overleap several segments
+    (or the padded block range entirely, silently dropping their end
+    cuts).  The clamp keeps ``k <= cut_k`` everywhere, so every cut fires
+    in the block holding its cut position, never behind the scan.
+
+    ``ends``: (G,) int32 nondecreasing exclusive segment ends, padded past
+    the last real segment with ``n_row`` (= the row's payload end).  Empty
+    segments are duplicate entries and are skipped naturally — the advance
+    looks for the *next strictly greater* end.
+    """
+    W = p.block_width
+    nb = candb.shape[0]
+    iota = jnp.arange(W, dtype=jnp.int32)
+    T = jnp.int32(p.skip_trigger)
+
+    def next_end(x):
+        return jnp.min(jnp.where(ends > x, ends, _BIG))
+
+    def step(state, xs):
+        cb, ob, bstart = xs
+        bend = bstart + W
+
+        def resolve_once(st):
+            k, c, s, se, cnt, out, go = st
+            in_block = (k < bend) & (s < n_row)
+            o = jnp.maximum(k - bstart, 0)
+            active = iota >= o
+            pos = bstart + iota
+            kc = jnp.min(jnp.where(cb & active, pos, _BIG))
+            cum = c + jnp.cumsum((ob & active).astype(jnp.int32))
+            kt = jnp.min(jnp.where(ob & active & (cum > T), pos, _BIG))
+            new_k, new_s, emit, bound, any_event = _resolve(
+                k, c, s, kc, kt, bend, in_block, se, p
+            )
+            new_c = jnp.where(any_event, 0, jnp.where(in_block, cum[-1], c))
+            new_se = jnp.where(emit & (bound >= se), next_end(bound), se)
+            # clamp the post-emit scan position to the next pending cut
+            # (min-size skip may overleap a whole run of tiny segments —
+            # and the padded block range entirely; positions before
+            # ``new_se - (L-1)`` hold no legal event: in-segment candidate
+            # bits are clipped to ``pos <= end - L`` and a skip can never
+            # preempt the cut, which wins position ties)
+            new_k = jnp.where(
+                emit, jnp.minimum(new_k, new_se - (p.seq_length - 1)), new_k
+            )
+            out = out.at[jnp.where(emit, cnt, max_chunks)].set(
+                bound.astype(jnp.int32), mode="drop"
+            )
+            cnt = cnt + emit.astype(jnp.int32)
+            # a late segment-end cut resets the scan *inside* this block:
+            # go around again (non-emit events always clear it — a skip
+            # lands >= bstart + skip_size >= bend, a no-event pass at bend)
+            go = emit & (new_k < bend) & (new_s < n_row)
+            return (new_k, new_c, new_s, new_se, cnt, out, go)
+
+        st = jax.lax.while_loop(
+            lambda st: st[-1], resolve_once, state + (jnp.bool_(True),)
+        )
+        return st[:-1], None
+
+    out0 = jnp.full((max_chunks,), _BIG, dtype=jnp.int32)
+    se0 = next_end(jnp.int32(0))
+    # the same clamp at init: the first segment may be shorter than min_size
+    k0 = jnp.minimum(jnp.int32(p.sub_min_skip), se0 - (p.seq_length - 1))
+    init = (k0, jnp.int32(0), jnp.int32(0), se0, jnp.int32(0), out0)
+    bstarts = jnp.arange(nb, dtype=jnp.int32) * W
+    (_, _, _, _, count, out), _ = jax.lax.scan(
+        step, init, (candb, oppb, bstarts)
+    )
+    return out, count
+
+
+def select_boundaries_packed(
+    cand: jax.Array,
+    opp: jax.Array,
+    ends: jax.Array,
+    p: SeqCDCParams,
+    *,
+    max_chunks: int,
+) -> tuple[jax.Array, jax.Array]:
+    """Resolve chunk boundaries for a packed row of concatenated streams.
+
+    ``cand``/``opp`` are (S,) row-wide bitmaps already clipped per segment
+    (see ``seqcdc.boundaries_packed``); ``ends`` is the (G,) segment-end
+    table.  Returns ``(bounds, count)`` in *row* coordinates: ascending
+    exclusive ends with every segment end present exactly once, so
+    consecutive differences are exact chunk lengths and a host demux can
+    slice per-stream results back out with two searchsorteds.  Only the
+    ``wide`` step is provided for packed rows (it is the one the fused
+    kernel mirrors block-for-block).
+    """
+    S = cand.shape[-1]
+    n_row = jnp.max(ends)  # dynamic: the row's real payload end
+    candb, oppb = _padded_blocks(cand, opp, S, p)
+    out, count = _scan_wide_packed(candb, oppb, ends, n_row, p, max_chunks)
+    # fix-up: guarantee the final boundary n_row (dynamic here, unlike the
+    # unpacked select_boundaries where n is static)
+    last = jnp.where(count > 0, out[jnp.maximum(count - 1, 0)], 0)
+    need = (last < n_row) & (n_row > 0)
+    out = out.at[jnp.where(need, count, max_chunks)].set(n_row, mode="drop")
+    count = count + need.astype(jnp.int32)
+    return out, count
+
+
 def _scan_gather(candb, oppb, n, p: SeqCDCParams):
     """Optimized step: O(1) gathers per block.
 

@@ -62,6 +62,65 @@ def boundaries_two_phase(
     )
 
 
+@functools.partial(
+    jax.jit, static_argnames=("p", "mask_impl", "max_chunks")
+)
+def boundaries_packed(
+    data: jax.Array,
+    seg_end_pos: jax.Array,
+    ends: jax.Array,
+    p: SeqCDCParams,
+    *,
+    mask_impl: MaskImpl = "jnp",
+    max_chunks: int,
+) -> tuple[jax.Array, jax.Array]:
+    """Chunk a packed row of concatenated streams, bit-identical per segment.
+
+    ``data``: (S,) uint8 — several streams laid out back to back, zero
+    padding after the last.  ``seg_end_pos``: (S,) int32 — for every byte
+    position, the exclusive end of the segment it belongs to (the row
+    payload end for padding positions).  ``ends``: (G,) int32 nondecreasing
+    segment ends, padded with the payload end.
+
+    The row-wide phase-1 bitmaps see cross-segment byte pairs (stream i's
+    last byte against stream i+1's first), which a per-stream run never
+    compares; clipping candidate bits to ``pos <= end - L`` and opposing
+    bits to ``pos < end - 1`` of their own segment removes exactly those,
+    leaving every surviving bit equal to the bit the segment's solo run
+    would compute.  Phase 2 is the packed automaton
+    (``automaton.select_boundaries_packed``), which resets at segment ends.
+    Returned bounds are in row coordinates with every segment end present
+    exactly once (``wide``-step semantics; packed rows have no ``step_impl``
+    selector).
+    """
+    S = data.shape[-1]
+    if S == 0:  # static: an empty row has no chunks
+        return jnp.full((max_chunks,), _BIG, dtype=jnp.int32), jnp.int32(0)
+    cand, opp = _compute_masks(data, p, mask_impl)
+    pos = jnp.arange(S, dtype=jnp.int32)
+    cand = cand & (pos <= seg_end_pos - p.seq_length)
+    opp = opp & (pos < seg_end_pos - 1)
+    return automaton.select_boundaries_packed(
+        cand, opp, ends, p, max_chunks=max_chunks
+    )
+
+
+def boundaries_packed_batch(
+    data: jax.Array,
+    seg_end_pos: jax.Array,
+    ends: jax.Array,
+    p: SeqCDCParams,
+    *,
+    mask_impl: MaskImpl = "jnp",
+    max_chunks: int,
+) -> tuple[jax.Array, jax.Array]:
+    """Batched :func:`boundaries_packed` over (B, S) rows / (B, G) ends."""
+    fn = functools.partial(
+        boundaries_packed, p=p, mask_impl=mask_impl, max_chunks=max_chunks
+    )
+    return jax.vmap(lambda d, sep, e: fn(d, sep, e))(data, seg_end_pos, ends)
+
+
 @functools.partial(jax.jit, static_argnames=("p", "max_chunks"))
 def boundaries_sequential(
     data: jax.Array, p: SeqCDCParams, *, max_chunks: int | None = None

@@ -383,3 +383,393 @@ def fused_pipeline(
         data[None], p, max_chunks=max_chunks, tile=tile, interpret=interpret
     )
     return b[0], c[0], f[0], ln[0]
+
+
+# ---------------------------------------------------------------------------
+# Segment-packed rows: many small streams share one device row.
+# ---------------------------------------------------------------------------
+
+
+def _packed_pipeline_kernel(
+    t0_ref, x_ref, halo_ref, sep_ref, ends_ref, pend_ref, rend_ref,
+    rneg_ref, rpos_ref, wneg_ref, postab_ref,
+    bounds_ref, counts_ref, fps_ref, lens_ref, sti_ref, sth_ref, sps_ref,
+    *, p: SeqCDCParams, mc: int, tile: int, halo: int,
+    nb_split: int, last_t0: int,
+):
+    """``_pipeline_kernel`` with per-segment resets (docs/KERNELS.md).
+
+    Four deltas against the unpacked kernel:
+
+    * the automaton's file end is the *current segment's* end ``se`` (a
+      fifth scratch register) instead of the static row width, and every
+      emit landing on ``se`` advances it — the registers the emit leaves
+      behind are exactly a fresh stream's init state, so the segment reset
+      costs nothing beyond the extra register (the proof lives with
+      ``automaton._scan_wide_packed``, which this mirrors block-for-block);
+    * the mask lanes clip per *position* against the ``seg_end_pos``
+      operand (cross-segment byte pairs must not form candidates), where
+      the unpacked kernel clips against the static ``n``;
+    * one W-block can emit several chunks: a segment-end cut resolving
+      late resets the scan position *behind* or *inside* the block it
+      fired in, so the per-block step is a ``while_loop`` that re-resolves
+      until the position clears the block (mirroring
+      ``_scan_wide_packed``'s inner loop), not the unpacked kernel's
+      single ``_resolve``;
+    * a bound behind the tile start needs its prefix from somewhere the
+      running carry can't provide — the bytes between it and ``t0`` are
+      *later* segments' real bytes, so ``P(t0) != P(bound)``, unlike the
+      unpacked kernel's zero-pad argument.  Segment-end cuts (arbitrarily
+      far behind) read host-shaped per-segment operands (``pend`` /
+      ``rend``) looked up by end offset; max-size cuts land at most
+      ``skip_size - L`` behind (a skip crossed the tile edge) and read the
+      ``sps`` scratch — the previous tile's last ``skip_size + 1`` prefix
+      values, stashed tile-to-tile — with ``r^(bound-1)`` reconstructed as
+      ``r^t0 * r^-(t0-bound+1)`` from the resident negpow table.
+    """
+    t0 = t0_ref[0, 0]
+    L = p.seq_length
+    W = p.block_width
+    nb = tile // W
+    T = jnp.int32(p.skip_trigger)
+    ext_len = tile + halo
+    HL = p.skip_size  # left-stash depth: max behind-t0 reach of a max cut
+    ends = ends_ref[0]  # (G,) segment ends, padded with the payload end
+    n_row = jnp.max(ends)  # dynamic payload end (0 for an all-pad row)
+    pend = pend_ref[0]  # (2, G) P(end) per generator
+    rend = rend_ref[0]  # (2, G) r^(end-1) per generator
+
+    def next_end(x):
+        return jnp.min(jnp.where(ends > x, ends, _BIG))
+
+    @pl.when(t0 == 0)  # first tile of a row: reset state and outputs
+    def _init():
+        sti_ref[...] = jnp.zeros_like(sti_ref)  # k, c, s, cnt, se
+        first_end = next_end(jnp.int32(0))
+        # same init clamp as _scan_wide_packed: the first segment may be
+        # shorter than min_size
+        sti_ref[0] = jnp.minimum(jnp.int32(p.sub_min_skip),
+                                 first_end - (L - 1))
+        sti_ref[4] = first_end
+        sth_ref[...] = jnp.zeros_like(sth_ref)  # P(t0) carry, P(s) latch
+        sps_ref[...] = jnp.zeros_like(sps_ref)  # P(t0 - q) left stash
+        bounds_ref[...] = jnp.full_like(bounds_ref, _BIG)
+        counts_ref[...] = jnp.zeros_like(counts_ref)
+        fps_ref[...] = jnp.zeros_like(fps_ref)
+        lens_ref[...] = jnp.zeros_like(lens_ref)
+
+    # -- the one byte read: tile + halo, same as the unpacked kernel --------
+    x = x_ref[0]
+    ext = jnp.concatenate([x, halo_ref[0, 0]])
+
+    # -- mask lanes, clipped per segment -------------------------------------
+    a = ext[:-1]
+    b = ext[1:]
+    gt = b > a
+    lt = b < a
+    inc = p.mode == "increasing"
+    fwd = gt if inc else lt
+    acc = fwd[:tile]
+    for j in range(1, L - 1):
+        acc = jnp.logical_and(acc, fwd[j:j + tile])
+    pos = t0 + jnp.arange(tile, dtype=jnp.int32)
+    sep = sep_ref[0]  # (tile,) exclusive end of each position's segment
+    cand = acc & (pos <= sep - L)
+    opp = (lt if inc else gt)[:tile] & (pos < sep - 1)
+
+    # -- hash lanes: identical to the unpacked kernel ------------------------
+    xw = ext.astype(jnp.uint32)
+    lo, hi = [], []
+    for g in range(2):
+        w = _byte_mulmod(xw, wneg_ref[g])
+        lo.append(jnp.cumsum(w & 0xFFFF, dtype=jnp.uint32))
+        hi.append(jnp.cumsum(w >> 16, dtype=jnp.uint32))
+    rneg = rneg_ref[0]
+    rpos = rpos_ref[0]
+    carry0 = sth_ref[0, 0]
+    carry1 = sth_ref[0, 1]
+
+    def tile_prefix(g, m):
+        i = jnp.maximum(m - 1, 0)
+        part = _addmod(_fold32(lo[g][i]), _rot31(_fold32(hi[g][i]), 16))
+        return jnp.where(m > 0, part, jnp.uint32(0))
+
+    def prefix_at(g, carry_g, e):
+        m = jnp.clip(e - t0, 0, ext_len)
+        return _addmod(carry_g, _mulmod31(rneg[g], tile_prefix(g, m)))
+
+    def end_lookup(tab, g, e):
+        """The (2, G) operand entry for the segment whose end == ``e``
+        (duplicate ends from empty segments carry identical values)."""
+        return jnp.max(jnp.where(ends == e, tab[g], jnp.uint32(0)))
+
+    def chunk_fp(g, carry_g, ps_g, e):
+        # a bound behind this tile is a cut: a segment end (pend/rend
+        # operands, any depth) or a max-size cut a skip carried across the
+        # tile edge (< skip_size behind: the sps left stash, with the
+        # factor r^(e-1) = r^t0 * r^-(t0-e+1) off the negpow table)
+        behind = e - 1 - t0 < 0
+        is_end = jnp.any(ends == e)
+        pe_b = jnp.where(is_end, end_lookup(pend, g, e),
+                         sps_ref[g, jnp.clip(t0 - e, 0, HL)])
+        pe = jnp.where(behind, pe_b, prefix_at(g, carry_g, e))
+        diff = _addmod(pe, P31 - ps_g)
+        fi = jnp.clip(e - 1 - t0, 0, ext_len - 1)
+        rfac = _mulmod31(rpos[g], postab_ref[g, fi])
+        rf_b = jnp.where(
+            is_end, end_lookup(rend, g, e),
+            _mulmod31(rpos[g], wneg_ref[g, jnp.clip(t0 - (e - 1), 0, HL + 1)]),
+        )
+        rfac = jnp.where(behind, rf_b, rfac)
+        return pe, _mulmod31(diff, rfac)
+
+    # -- packed boundary automaton: _scan_wide_packed's step per W-block -----
+    iota = jnp.arange(W, dtype=jnp.int32)
+    k0, c0, s0, cnt0, se0 = (sti_ref[0], sti_ref[1], sti_ref[2],
+                             sti_ref[3], sti_ref[4])
+    ps0 = sth_ref[1, 0], sth_ref[1, 1]
+
+    def body(j, st):
+        bstart = t0 + j * W
+        bend = bstart + W
+        cb = jax.lax.dynamic_slice(cand, (j * W,), (W,))
+        ob = jax.lax.dynamic_slice(opp, (j * W,), (W,))
+
+        def resolve_once(wst):
+            k, c, s, cnt, se, ps_0, ps_1, go = wst
+            in_block = (k < bend) & (s < n_row) & (t0 // W + j < nb_split)
+            o = jnp.maximum(k - bstart, 0)
+            active = iota >= o
+            posw = bstart + iota
+            kc = jnp.min(jnp.where(cb & active, posw, _BIG))
+            cum = c + jnp.cumsum((ob & active).astype(jnp.int32))
+            kt = jnp.min(jnp.where(ob & active & (cum > T), posw, _BIG))
+            new_k, new_s, emit, bound, any_event = _resolve(
+                k, c, s, kc, kt, bend, in_block, se, p
+            )
+            new_c = jnp.where(any_event, 0, jnp.where(in_block, cum[-1], c))
+            pe0, fp0 = chunk_fp(0, carry0, ps_0, bound)
+            pe1, fp1 = chunk_fp(1, carry1, ps_1, bound)
+            idx = jnp.minimum(cnt, mc - 1)
+            keep = emit & (cnt < mc)
+            bounds_ref[0, idx] = jnp.where(keep, bound, bounds_ref[0, idx])
+            lens_ref[0, idx] = jnp.where(keep, bound - s, lens_ref[0, idx])
+            fps_ref[0, idx, 0] = jnp.where(keep, fp0, fps_ref[0, idx, 0])
+            fps_ref[0, idx, 1] = jnp.where(keep, fp1, fps_ref[0, idx, 1])
+            # a bound on the segment end advances to the next segment: the
+            # emit's own register updates are the next stream's init state
+            new_se = jnp.where(emit & (bound >= se), next_end(bound), se)
+            # clamp the post-emit position to the next pending cut, exactly
+            # as _scan_wide_packed does: the min-size skip may overleap a
+            # run of tiny segments (and their end cuts) entirely
+            new_k = jnp.where(
+                emit, jnp.minimum(new_k, new_se - (L - 1)), new_k
+            )
+            # a late segment-end cut resets the scan inside this block:
+            # re-resolve until the position clears it (_scan_wide_packed's
+            # inner loop, block-for-block)
+            go = emit & (new_k < bend) & (new_s < n_row)
+            return (new_k, new_c, new_s, cnt + emit.astype(jnp.int32),
+                    new_se, jnp.where(emit, pe0, ps_0),
+                    jnp.where(emit, pe1, ps_1), go)
+
+        wst = jax.lax.while_loop(
+            lambda wst: wst[-1], resolve_once, st + (jnp.bool_(True),)
+        )
+        return wst[:-1]
+
+    k, c, s, cnt, se, ps_0, ps_1 = jax.lax.fori_loop(
+        0, nb, body, (k0, c0, s0, cnt0, se0, *ps0)
+    )
+
+    # -- final-boundary fixup: the row's payload end, dynamic here -----------
+    last = jnp.where(
+        cnt > 0, bounds_ref[0, jnp.clip(cnt - 1, 0, mc - 1)], 0)
+    need = (t0 == last_t0) & (last < n_row) & (n_row > 0)
+    pe0 = prefix_at(0, carry0, n_row)  # past-payload bytes are zero padding,
+    pe1 = prefix_at(1, carry1, n_row)  # so the clipped read is exact even
+    fp0 = _mulmod31(_addmod(pe0, P31 - ps_0),  # when n_row is behind t0
+                    end_lookup(rend, 0, n_row))
+    fp1 = _mulmod31(_addmod(pe1, P31 - ps_1),
+                    end_lookup(rend, 1, n_row))
+    idx = jnp.minimum(cnt, mc - 1)
+    keep = need & (cnt < mc)
+    bounds_ref[0, idx] = jnp.where(keep, n_row, bounds_ref[0, idx])
+    lens_ref[0, idx] = jnp.where(keep, n_row - s, lens_ref[0, idx])
+    fps_ref[0, idx, 0] = jnp.where(keep, fp0, fps_ref[0, idx, 0])
+    fps_ref[0, idx, 1] = jnp.where(keep, fp1, fps_ref[0, idx, 1])
+    cnt = cnt + need.astype(jnp.int32)
+
+    # -- persist state for the next tile --------------------------------------
+    counts_ref[0, 0] = cnt
+    sti_ref[...] = jnp.stack([k, c, s, cnt, se])
+    sth_ref[0, 0] = _addmod(carry0, _mulmod31(rneg[0], tile_prefix(0, tile)))
+    sth_ref[0, 1] = _addmod(carry1, _mulmod31(rneg[1], tile_prefix(1, tile)))
+    sth_ref[1, 0] = ps_0
+    sth_ref[1, 1] = ps_1
+    # left stash for the next tile: P(next_t0 - q), q in [0, HL] (tile > HL,
+    # asserted by the wrapper, so every read lands inside this tile's limbs)
+    li = tile - 1 - jnp.arange(HL + 1, dtype=jnp.int32)
+    for g, carry_g in ((0, carry0), (1, carry1)):
+        parts = _addmod(_fold32(lo[g][li]), _rot31(_fold32(hi[g][li]), 16))
+        sps_ref[g] = _addmod(carry_g, _mulmod31(rneg[g], parts))
+
+
+@functools.partial(
+    jax.jit, static_argnames=("p", "max_chunks", "tile", "interpret")
+)
+def packed_pipeline_batch(
+    data: jax.Array,
+    seg_end_pos: jax.Array,
+    ends: jax.Array,
+    p: SeqCDCParams,
+    *,
+    max_chunks: int,
+    tile: int = DEFAULT_TILE,
+    interpret: bool = True,
+) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Chunk + fingerprint a segment-packed ``(B, S)`` batch in one dispatch.
+
+    Each row holds several streams concatenated back to back (``ends``:
+    (B, G) nondecreasing exclusive segment ends padded with the row's
+    payload end; ``seg_end_pos``: (B, S) the segment end governing each
+    byte position).  Returns the same ``(bounds, counts, fps, lengths)``
+    layout as :func:`fused_pipeline_batch` but in row coordinates with
+    every segment end present as a bound — bit-identical, per segment, to
+    chunking each stream alone (``seqcdc.boundaries_packed`` composed with
+    ``chunk_fingerprints`` is the split-path oracle; ``ref.packed_pipeline``
+    is the per-stream host oracle).
+
+    The 62-bit fingerprint is translation invariant (bytes are weighted by
+    offset from the *chunk end*), so packed-row fps equal per-stream fps
+    with no correction; only the prefix bookkeeping inside the kernel needs
+    the per-segment ``P(end)``/``r^(end-1)`` operands, computed here from
+    the row bytes with the same 16-bit-limb trick the kernel uses (exact
+    because ``S <= 65536``, enforced below — one packed row is at most the
+    fingerprint kernel's own byte bound).
+    """
+    assert data.ndim == 2, data.shape
+    B, n = data.shape
+    G = ends.shape[-1]
+    mc = max_chunks
+    if n == 0:  # static: no chunks
+        return (jnp.full((B, mc), _BIG, jnp.int32),
+                jnp.zeros((B,), jnp.int32),
+                jnp.zeros((B, mc, 2), jnp.uint32),
+                jnp.zeros((B, mc), jnp.int32))
+    if p.max_size > MAX_CHUNK:
+        raise ValueError(
+            f"max_size {p.max_size} exceeds the fingerprint power-table "
+            f"bound {MAX_CHUNK}"
+        )
+    if n > MAX_CHUNK:
+        raise ValueError(
+            f"packed row width {n} exceeds the limb-exactness bound "
+            f"{MAX_CHUNK}; pack into narrower rows"
+        )
+    L = p.seq_length
+    W = p.block_width
+    halo = p.skip_size + L - 1
+    nb_split = (n + p.skip_size + W + W - 1) // W
+    cover = nb_split * W
+    tile = min(tile, (cover + 1023) // 1024 * 1024)
+    assert tile % 1024 == 0 and tile % W == 0, (tile, W)
+    assert tile + halo <= MAX_CHUNK, (tile, halo)
+    nt = (cover + tile - 1) // tile
+    n_pad = nt * tile
+    # the left-prefix stash reaches skip_size positions into the previous
+    # tile; a skip wider than a tile would outrun it
+    assert p.skip_size < tile, (p.skip_size, tile)
+
+    x = jnp.pad(data.astype(jnp.uint8), ((0, 0), (0, n_pad - n)))
+    # padding positions carry seg end 0: every clipped mask bit is false
+    # there (pos >= n > 0 >= sep - L), matching the zero-pad bytes
+    sep = jnp.pad(seg_end_pos.astype(jnp.int32), ((0, 0), (0, n_pad - n)))
+    xh = jnp.pad(x, ((0, 0), (0, halo)))
+    halos = jnp.stack(
+        [xh[:, (i + 1) * tile:(i + 1) * tile + halo] for i in range(nt)],
+        axis=1,
+    )
+    t0s = (jnp.arange(nt, dtype=jnp.int32) * tile).reshape(nt, 1)
+
+    pm = (1 << 31) - 1
+    wneg = jnp.stack(
+        [jnp.asarray(_negpow_table_np(r, tile + halo)) for r in (R1, R2)]
+    )
+    postab = jnp.stack(
+        [jnp.asarray(_pow_table_np(r)[: tile + halo]) for r in (R1, R2)]
+    )
+    rneg = jnp.asarray(np.array(
+        [[pow(pow(r, pm - 2, pm), i * tile, pm) for r in (R1, R2)]
+         for i in range(nt)], dtype=np.uint32))
+    rpos = jnp.asarray(np.array(
+        [[pow(r, i * tile, pm) for r in (R1, R2)] for i in range(nt)],
+        dtype=np.uint32))
+
+    # per-segment end operands: pend[b, g, i] = P_g(end_i) and
+    # rend[b, g, i] = r_g^(end_i - 1) — row-wide limb prefix sums gathered
+    # at the segment ends (uint32 cumsums of < 2^16 limbs over n <= 65536
+    # entries: exact, the kernel's own argument)
+    ends = ends.astype(jnp.int32)
+    e_idx = jnp.clip(ends - 1, 0, n - 1)  # (B, G)
+    full_pow = jnp.stack(
+        [jnp.asarray(_pow_table_np(r)[:n]) for r in (R1, R2)]
+    )  # (2, n): r^q for q < n; end - 1 < n always
+    wneg_row = jnp.stack(
+        [jnp.asarray(_negpow_table_np(r, n)) for r in (R1, R2)]
+    )
+    pr, rr = [], []
+    for g in range(2):
+        w = _byte_mulmod(data.astype(jnp.uint32), wneg_row[g])  # (B, n)
+        lo = jnp.cumsum(w & 0xFFFF, axis=-1, dtype=jnp.uint32)
+        hi = jnp.cumsum(w >> 16, axis=-1, dtype=jnp.uint32)
+        pg = _addmod(
+            _fold32(jnp.take_along_axis(lo, e_idx, axis=-1)),
+            _rot31(_fold32(jnp.take_along_axis(hi, e_idx, axis=-1)), 16),
+        )
+        pr.append(jnp.where(ends > 0, pg, jnp.uint32(0)))
+        rr.append(jnp.where(ends > 0, full_pow[g][e_idx], jnp.uint32(0)))
+    pend = jnp.stack(pr, axis=1)  # (B, 2, G)
+    rend = jnp.stack(rr, axis=1)  # (B, 2, G)
+
+    from jax.experimental.pallas import tpu as pltpu
+
+    bounds, counts, fps, lens = pl.pallas_call(
+        functools.partial(
+            _packed_pipeline_kernel, p=p, mc=mc, tile=tile, halo=halo,
+            nb_split=nb_split, last_t0=(nt - 1) * tile,
+        ),
+        grid=(B, nt),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda b, i: (i, 0)),  # t0
+            pl.BlockSpec((1, tile), lambda b, i: (b, i)),
+            pl.BlockSpec((1, 1, halo), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, tile), lambda b, i: (b, i)),  # seg_end_pos
+            pl.BlockSpec((1, G), lambda b, i: (b, 0)),  # ends
+            pl.BlockSpec((1, 2, G), lambda b, i: (b, 0, 0)),  # P(end)
+            pl.BlockSpec((1, 2, G), lambda b, i: (b, 0, 0)),  # r^(end-1)
+            pl.BlockSpec((1, 2), lambda b, i: (i, 0)),  # r^-t0
+            pl.BlockSpec((1, 2), lambda b, i: (i, 0)),  # r^t0
+            pl.BlockSpec((2, tile + halo), lambda b, i: (0, 0)),
+            pl.BlockSpec((2, tile + halo), lambda b, i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, mc), lambda b, i: (b, 0)),
+            pl.BlockSpec((1, 1), lambda b, i: (b, 0)),
+            pl.BlockSpec((1, mc, 2), lambda b, i: (b, 0, 0)),
+            pl.BlockSpec((1, mc), lambda b, i: (b, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, mc), jnp.int32),
+            jax.ShapeDtypeStruct((B, 1), jnp.int32),
+            jax.ShapeDtypeStruct((B, mc, 2), jnp.uint32),
+            jax.ShapeDtypeStruct((B, mc), jnp.int32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((5,), jnp.int32),  # automaton k, c, s, cnt, se
+            pltpu.VMEM((2, 2), jnp.uint32),  # P(t0) carry, P(s) latch
+            pltpu.VMEM((2, p.skip_size + 1), jnp.uint32),  # P(t0-q) stash
+        ],
+        interpret=interpret,
+    )(t0s, x, halos, sep, ends, pend, rend, rneg, rpos, wneg, postab)
+    return bounds, counts[:, 0], fps, lens

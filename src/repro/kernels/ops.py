@@ -79,3 +79,22 @@ def fused_pipeline(data, p, *, max_chunks: int):
     return _fpipe.fused_pipeline_batch(
         data, p, max_chunks=max_chunks, interpret=_interpret()
     )
+
+
+def packed_pipeline(data, seg_end_pos, ends, p, *, max_chunks: int):
+    """Segment-packed fused pipeline: many streams per device row.
+
+    ``data``: ``(B, S)`` uint8 rows of concatenated streams;
+    ``seg_end_pos``: ``(B, S)`` int32 per-position segment ends;
+    ``ends``: ``(B, G)`` int32 nondecreasing segment ends padded with the
+    row payload end.  Returns ``(bounds, counts, fps, lengths)`` in row
+    coordinates, bit-identical per segment to chunking each stream alone
+    (``ref.packed_pipeline`` is the host oracle; the packed split path is
+    ``seqcdc.boundaries_packed_batch`` + ``chunk_fingerprints``).
+    """
+    from . import fused_pipeline as _fpipe
+
+    return _fpipe.packed_pipeline_batch(
+        data, seg_end_pos, ends, p, max_chunks=max_chunks,
+        interpret=_interpret(),
+    )

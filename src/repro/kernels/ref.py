@@ -148,6 +148,49 @@ def fused_pipeline(data, p, *, max_chunks: int):
     return bounds, counts, fps, lens
 
 
+def packed_pipeline(data, seg_lens, p, *, max_chunks: int):
+    """Oracle for the segment-packed pipeline: chunk each stream *alone*.
+
+    ``data``: (B, S) uint8 rows of concatenated streams; ``seg_lens``: per
+    row, the list of stream lengths packed into it (zeros allowed — empty
+    streams contribute no chunks).  Every segment runs through the host
+    ground truth (``oracle.boundaries_numpy`` + ``fingerprints_numpy`` —
+    the normative pair the whole equivalence suite anchors on, so this
+    oracle cannot share a bug with either device path) and the results are
+    re-offset into row coordinates.  Returns the packed layout
+    ``(bounds (B, mc) int32 sentinel-padded, counts (B,), fps (B, mc, 2),
+    lengths (B, mc))``.
+    """
+    import numpy as np
+
+    from repro.core import oracle as _oracle
+    from repro.core.automaton import _BIG
+    from repro.dedup.fingerprint import fingerprints_numpy
+
+    data = np.asarray(data, dtype=np.uint8)
+    B = data.shape[0]
+    mc = max_chunks
+    bounds = np.full((B, mc), int(_BIG), dtype=np.int32)
+    counts = np.zeros((B,), dtype=np.int32)
+    fps = np.zeros((B, mc, 2), dtype=np.uint32)
+    lens = np.zeros((B, mc), dtype=np.int32)
+    for bi, lens_b in enumerate(seg_lens):
+        off = 0
+        j = 0
+        for m in lens_b:
+            seg = data[bi, off:off + m]
+            bb = _oracle.boundaries_numpy(seg, p)
+            ff = fingerprints_numpy(seg, bb)
+            k = len(bb)
+            bounds[bi, j:j + k] = np.asarray(bb, dtype=np.int32) + off
+            fps[bi, j:j + k] = ff
+            lens[bi, j:j + k] = np.diff(np.concatenate([[0], bb]))
+            off += m
+            j += k
+        counts[bi] = j
+    return bounds, counts, fps, lens
+
+
 # ---------------------------------------------------------------------------
 # Block maxima (VectorCDC / RAM-AE range-scan substrate).
 # ---------------------------------------------------------------------------

@@ -30,6 +30,7 @@ _EXPORTS = {
     "ChunkScheduler": ".scheduler",
     "FingerprintDivergenceError": ".scheduler",
     "MaskDivergenceError": ".scheduler",
+    "PackingDivergenceError": ".scheduler",
     "PipelineDivergenceError": ".scheduler",
     "SchedulerStats": ".scheduler",
     "ShardedDedupService": ".sharded",

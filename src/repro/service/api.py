@@ -233,10 +233,12 @@ class DedupService(ServiceBase):
         step_impl: str = "wide",
         fp_impl: str = "reference",
         pipeline_impl: str | None = None,
+        packing_impl: str | None = None,
         with_fingerprints: bool = True,
         cross_check_masks: bool = False,
         cross_check_fps: bool = False,
         cross_check_pipeline: bool = False,
+        cross_check_packing: bool = False,
     ):
         self.params = params or derived_params(avg_chunk)
         self.store = store if store is not None else BlockStore()
@@ -248,10 +250,12 @@ class DedupService(ServiceBase):
             self.params, registry=self.obs, slots=slots, min_bucket=min_bucket,
             mask_impl=mask_impl, step_impl=step_impl, fp_impl=fp_impl,
             pipeline_impl=pipeline_impl,
+            packing_impl=packing_impl,
             with_fingerprints=with_fingerprints,
             cross_check_masks=cross_check_masks,
             cross_check_fps=cross_check_fps,
             cross_check_pipeline=cross_check_pipeline,
+            cross_check_packing=cross_check_packing,
         )
         # ingest-cumulative: tracks every chunk ever ingested (the estimator
         # semantics); deletes/overwrites do not shrink it, unlike the exact

@@ -102,9 +102,11 @@ class ShardedDedupService(ServiceBase):
         step_impl: str = "wide",
         fp_impl: str = "reference",
         pipeline_impl: str | None = None,
+        packing_impl: str | None = None,
         cross_check_masks: bool = False,
         cross_check_fps: bool = False,
         cross_check_pipeline: bool = False,
+        cross_check_packing: bool = False,
         async_flush: bool = True,
         max_pending: int = 256,
         mesh=None,
@@ -149,10 +151,11 @@ class ShardedDedupService(ServiceBase):
         self.scheduler = ChunkScheduler(
             self.params, registry=self.obs, slots=slots, min_bucket=min_bucket,
             mask_impl=mask_impl, step_impl=step_impl, fp_impl=fp_impl,
-            pipeline_impl=pipeline_impl,
+            pipeline_impl=pipeline_impl, packing_impl=packing_impl,
             with_fingerprints=True, cross_check_masks=cross_check_masks,
             cross_check_fps=cross_check_fps,
             cross_check_pipeline=cross_check_pipeline,
+            cross_check_packing=cross_check_packing,
         )
         # validate the mesh before anything spawns threads: a constructor
         # that raises must not leak per-shard writer workers

@@ -165,8 +165,11 @@ def test_fingerprint_divergence_raises(rng, monkeypatch):
     cross-check's replay sees fingerprints that differ from the dispatch."""
     import repro.service.scheduler as sched_mod
 
+    # packing off: this pins the *bucket* path's guard, which fires at
+    # submit time (under REPRO_PACKING_IMPL=segments a 900-byte stream
+    # would queue for a packed row instead)
     sched = ChunkScheduler(P, slots=1, min_bucket=1024, fp_impl="reference",
-                           cross_check_fps=True)
+                           cross_check_fps=True, packing_impl="off")
     real = sched_mod.chunk_fingerprints
 
     def lying(data, b, c, **kw):

@@ -158,8 +158,11 @@ def test_unknown_pipeline_impl_rejected():
 def _corrupting_scheduler():
     """split dispatch + armed pipeline guard: the guard replays the fused
     path via scheduler._run_fused, which the tests below corrupt."""
-    return ChunkScheduler(P, slots=1, min_bucket=1024,
-                          pipeline_impl="split", cross_check_pipeline=True)
+    # packing off: these tests pin the *bucket* path's guard, which fires
+    # at submit time (under REPRO_PACKING_IMPL=segments the 900-byte
+    # stream would queue for a packed row instead)
+    return ChunkScheduler(P, slots=1, min_bucket=1024, pipeline_impl="split",
+                          cross_check_pipeline=True, packing_impl="off")
 
 
 def test_pipeline_divergence_boundary_stage(rng, monkeypatch):

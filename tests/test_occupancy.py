@@ -3,16 +3,20 @@
 The occupancy benchmark exposed the scheduler's adversarial regimes —
 most notably the all-tiny mix riding the ``min_bucket`` floor at ~96% pad
 waste (ROADMAP: "scheduler occupancy fixes for the all-tiny regime").
-This file turns those numbers into a regression test: the known-bad
-regime is *pinned* inside a band, so a future sub-bucket row-packing fix
-shows up as a loud (and welcome) assertion failure here and gets the pin
-moved, while an accidental regression of the good regimes fails the floor
-assertions.  The benchmark itself is imported and run at the quick budget
-(seeded draws: the numbers are deterministic on a given machine).
+This file turns those numbers into a regression test, in both packing
+modes: with ``packing_impl="off"`` the known-bad floor regime is *pinned*
+inside a band (so it stays visible as the baseline the packing layer is
+measured against), and with ``packing_impl="segments"`` the rescue is
+pinned as a floor — all-tiny occupancy must stay >= 0.60 (it lands near
+0.9), at least 5x the unpacked baseline, with a zero host-tail redo
+because packed results are exact.  The benchmark itself is imported and
+run at the quick budget (seeded draws: the numbers are deterministic on a
+given machine).
 """
 import os
 import sys
 
+import numpy as np
 import pytest
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
@@ -23,19 +27,20 @@ from benchmarks.bench_scheduler_occupancy import DISTRIBUTIONS, run
 @pytest.fixture(scope="module")
 def occupancy_rows():
     rows = run(budget="quick")
-    return {r["dist"]: r for r in rows}
+    return {(r["dist"], r["packing_impl"]): r for r in rows}
 
 
 def test_all_distributions_reported(occupancy_rows):
-    assert set(occupancy_rows) == set(DISTRIBUTIONS)
+    want = {(d, mode) for d in DISTRIBUTIONS for mode in ("off", "segments")}
+    assert set(occupancy_rows) == want
 
 
 def test_all_tiny_regime_pinned(occupancy_rows):
-    """The known-bad bucket-floor regime: ~96% of device bytes are padding
-    because a few-hundred-byte stream pays for a min_bucket row.  Pinned
-    in a band — if sub-bucket packing lands, this is the test that moves.
-    """
-    r = occupancy_rows["all_tiny"]
+    """The known-bad bucket-floor regime (packing off): ~96% of device
+    bytes are padding because a few-hundred-byte stream pays for a
+    min_bucket row.  Pinned in a band as the baseline segment packing is
+    judged against."""
+    r = occupancy_rows[("all_tiny", "off")]
     assert 92.0 <= r["pad_waste_pct"] <= 99.5, r["pad_waste_pct"]
     # the waste is *length* padding, not empty rows: rows are ~all filled,
     # and every stream is shorter than a full max_size window, so the
@@ -43,30 +48,86 @@ def test_all_tiny_regime_pinned(occupancy_rows):
     assert r["row_fill"] > 0.95, r["row_fill"]
     assert r["tail_pct"] == pytest.approx(100.0), r["tail_pct"]
     assert r["buckets"] == 1  # everything lands on the min_bucket floor
+    assert r["packed_streams"] == 0  # packing off: nothing shares a row
+
+
+def test_all_tiny_packed_rescued(occupancy_rows):
+    """Segment packing is the fix for the floor regime: all-tiny streams
+    share min_bucket rows back to back, so occupancy must clear 0.60 (vs
+    ~0.03 unpacked — at least a 5x recovery) and the host tail redo
+    disappears entirely (packed results are exact by construction)."""
+    off = occupancy_rows[("all_tiny", "off")]
+    on = occupancy_rows[("all_tiny", "segments")]
+    assert on["occupancy"] >= 0.60, on["occupancy"]
+    assert on["occupancy"] >= 5.0 * off["occupancy"], (
+        on["occupancy"], off["occupancy"])
+    assert on["tail_pct"] == 0.0, on["tail_pct"]
+    assert on["packed_streams"] == on["streams"]  # every stream packed
+    # device traffic shrank by more than an order of magnitude
+    assert on["device_mb"] * 10 < off["device_mb"]
 
 
 def test_uniform_control_regime(occupancy_rows):
-    """The distribution batching likes must stay decent: a drop below the
-    floor means a scheduler regression, not workload noise."""
-    r = occupancy_rows["uniform"]
-    assert r["occupancy"] >= 0.55, r["occupancy"]
-    assert r["row_fill"] >= 0.6, r["row_fill"]
+    """The distribution batching likes must stay decent in both modes: a
+    drop below the floor means a scheduler regression, not workload
+    noise."""
+    for mode in ("off", "segments"):
+        r = occupancy_rows[("uniform", mode)]
+        assert r["occupancy"] >= 0.55, (mode, r["occupancy"])
+        assert r["row_fill"] >= 0.6, (mode, r["row_fill"])
 
 
 def test_regime_ordering(occupancy_rows):
-    """Relative shape of the curve: uniform beats the adversarial mixes,
-    and all_tiny is the worst of them all."""
-    occ = {d: r["occupancy"] for d, r in occupancy_rows.items()}
+    """Relative shape of the unpacked curve: uniform beats the adversarial
+    mixes, and all_tiny is the worst of them all."""
+    occ = {d: occupancy_rows[(d, "off")]["occupancy"] for d in DISTRIBUTIONS}
     assert occ["uniform"] > occ["bimodal"]
     assert occ["uniform"] > occ["heavy_tail"]
     assert occ["all_tiny"] == min(occ.values())
-    assert occ["all_tiny"] < 0.10  # the floor regime is far from fixed
+    assert occ["all_tiny"] < 0.10  # the unpacked floor regime stays bad
+
+
+def test_packing_never_hurts(occupancy_rows):
+    """Turning packing on must not cost occupancy on any distribution:
+    streams at or above min_bucket take the bucket path unchanged, and
+    sub-bucket streams only get denser."""
+    for d in DISTRIBUTIONS:
+        off = occupancy_rows[(d, "off")]["occupancy"]
+        on = occupancy_rows[(d, "segments")]["occupancy"]
+        assert on >= off - 1e-9, (d, off, on)
 
 
 def test_device_bytes_account_for_padding(occupancy_rows):
     """occupancy == stream/device bytes by construction; the two byte
     counters must stay consistent with the reported ratio."""
-    for dist, r in occupancy_rows.items():
-        assert r["device_mb"] >= r["stream_mb"], dist
+    for key, r in occupancy_rows.items():
+        assert r["device_mb"] >= r["stream_mb"], key
         assert r["occupancy"] == pytest.approx(
-            r["stream_mb"] / r["device_mb"]), dist
+            r["stream_mb"] / r["device_mb"]), key
+
+
+def test_all_tiny_packed_bit_identical():
+    """The acceptance pin behind the occupancy win: the packed scheduler's
+    chunking of the all-tiny mix — bounds, lengths, *and* fingerprints —
+    is bit-identical to the packing-off scheduler, stream for stream."""
+    from repro.core.params import derived_params
+    from repro.service import ChunkScheduler
+
+    params = derived_params(8192)
+    rng = np.random.default_rng(17)
+    streams = [rng.integers(0, 256, int(rng.integers(100, 1000)),
+                            dtype=np.uint8) for _ in range(300)]
+
+    def chunk(packing):
+        sched = ChunkScheduler(params, slots=8, packing_impl=packing,
+                               cross_check_packing=(packing == "segments"))
+        for i, s in enumerate(streams):
+            sched.submit(s, tag=i)
+        return sched.drain()
+
+    off, on = chunk("off"), chunk("segments")
+    assert [r.tag for r in on] == [r.tag for r in off] == list(range(300))
+    for a, b in zip(off, on):
+        np.testing.assert_array_equal(a.bounds, b.bounds)
+        np.testing.assert_array_equal(a.lengths, b.lengths)
+        np.testing.assert_array_equal(a.fps, b.fps)

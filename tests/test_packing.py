@@ -1,0 +1,356 @@
+"""Segment-packed device rows: the packed pipeline's exactness contract.
+
+``packing_impl="segments"`` concatenates sub-``min_bucket`` streams into
+shared device rows; the whole feature rests on one invariant — a packed
+row chunks and fingerprints *bit-identically* to running each stream
+alone.  This file pins that invariant at every layer:
+
+* kernel level: directed edge cases (1-byte, empty, exactly-``min_size``,
+  the 65535-byte limb boundary, skip-overshoot segment endings, segment
+  ends landing exactly on Pallas tile edges) plus a property sweep of
+  random segment mixes, each checked against ``ref.packed_pipeline``
+  (the per-stream host oracle re-offset into row coordinates) on both the
+  packed split path and the packed fused kernel;
+* scheduler level: a packed ``ChunkScheduler`` returns the same
+  ``ChunkResult``s as a packing-off one, including edge-length streams;
+* guard level: corrupting either packed device runner makes the
+  first-dispatch cross-check raise ``PackingDivergenceError``.
+
+The property tests run under hypothesis when available and under the
+seeded ``_hyp_fallback`` sweep otherwise (same call surface).
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # no hypothesis in this env: deterministic fallback
+    from _hyp_fallback import given, settings, strategies as st
+
+import repro.service.scheduler as sched_mod
+from repro.core.params import SeqCDCParams
+from repro.core.seqcdc import boundaries_packed_batch
+from repro.dedup.fingerprint import chunk_fingerprints
+from repro.kernels import ops, ref
+from repro.service import ChunkScheduler, PackingDivergenceError
+
+P = SeqCDCParams(avg_size=256, seq_length=3, skip_trigger=6, skip_size=32,
+                 min_size=64, max_size=512)
+
+
+def _pack(streams, S, G=None):
+    """Rows of byte-strings -> (data, sep, ends, seg_lens) device operands,
+    the same layout ``ChunkScheduler._dispatch_packed_rows`` builds."""
+    if G is None:
+        G = max(len(row) for row in streams)
+    B = len(streams)
+    data = np.zeros((B, S), np.uint8)
+    sep = np.zeros((B, S), np.int32)
+    ends = np.zeros((B, G), np.int32)
+    seg_lens = []
+    for bi, row in enumerate(streams):
+        off = 0
+        for gi, s in enumerate(row):
+            m = len(s)
+            if m:
+                data[bi, off:off + m] = np.frombuffer(bytes(s), np.uint8)
+            sep[bi, off:off + m] = off + m
+            ends[bi, gi] = off + m
+            off += m
+        sep[bi, off:] = off
+        ends[bi, len(row):] = off
+        seg_lens.append([len(s) for s in row])
+    return data, sep, ends, seg_lens
+
+
+def _assert_matches_oracle(streams, S, *, fused=True, label=""):
+    """Both packed device paths must equal the per-stream host oracle."""
+    data, sep, ends, seg_lens = _pack(streams, S)
+    G = ends.shape[1]
+    mc = S // P.min_size + 2 * G + 2
+    ob, oc, of, ol = ref.packed_pipeline(data, seg_lens, P, max_chunks=mc)
+    sb, sc = boundaries_packed_batch(
+        jnp.asarray(data), jnp.asarray(sep), jnp.asarray(ends), P,
+        max_chunks=mc)
+    sf, sl = jax.vmap(lambda d, b, c: chunk_fingerprints(
+        d, b, c, max_chunks=mc, fp_impl="reference"))(
+        jnp.asarray(data), sb, sc)
+    np.testing.assert_array_equal(oc, np.asarray(sc), f"{label}: split counts")
+    np.testing.assert_array_equal(ob, np.asarray(sb), f"{label}: split bounds")
+    np.testing.assert_array_equal(of, np.asarray(sf), f"{label}: split fps")
+    np.testing.assert_array_equal(ol, np.asarray(sl), f"{label}: split lens")
+    if fused:
+        kb, kc, kf, kl = ops.packed_pipeline(
+            jnp.asarray(data), jnp.asarray(sep), jnp.asarray(ends), P,
+            max_chunks=mc)
+        np.testing.assert_array_equal(oc, np.asarray(kc),
+                                      f"{label}: fused counts")
+        np.testing.assert_array_equal(ob, np.asarray(kb),
+                                      f"{label}: fused bounds")
+        np.testing.assert_array_equal(of, np.asarray(kf),
+                                      f"{label}: fused fps")
+        np.testing.assert_array_equal(ol, np.asarray(kl),
+                                      f"{label}: fused lens")
+
+
+# -- kernel-level directed edges ------------------------------------------------
+
+def test_directed_edge_segments(rng):
+    """1-byte, empty, and exactly-min_size segments next to normal ones."""
+    r = lambda n: rng.integers(0, 256, n, dtype=np.uint8).tobytes()
+    _assert_matches_oracle(
+        [[r(1), b"", r(P.min_size), r(300), r(1)],
+         [b"", b"", r(700)],
+         [r(1)] * 8,
+         [r(P.min_size)] * 4],
+        S=1024, label="edges")
+
+
+def test_skip_overshoot_endings(rng):
+    """Segments ending mid-skip: constant bytes never form a candidate run,
+    so the automaton is skipping (or riding the max-size window) when it
+    hits the segment end — the overshoot must resolve as the end cut and
+    the next segment must restart cleanly."""
+    z = lambda n: bytes(n)
+    low = lambda n: rng.integers(0, 3, n, dtype=np.uint8).tobytes()
+    cases = [[z(70), z(100), z(130)],
+             [z(600), low(200), z(65)],
+             [low(511), z(513)],
+             # ends placed all over one skip_size window
+             [z(64 + q) for q in range(0, P.skip_size, 5)]]
+    _assert_matches_oracle(cases, S=1024, label="skip-overshoot")
+
+
+def test_segment_ends_on_tile_edges(rng):
+    """Segment boundaries exactly on (and one byte around) the Pallas tile
+    edge: the fused kernel's carry/stash hand-off across tiles must not
+    bleed hash state across a segment reset."""
+    from repro.kernels.fused_pipeline import packed_pipeline_batch
+
+    r = lambda n: rng.integers(0, 256, n, dtype=np.uint8).tobytes()
+    streams = [[r(1024), r(512), r(512)],
+               [r(1023), r(1), r(1024)],
+               [r(1), r(1023), r(1024)],
+               [r(1025), r(1023)]]
+    S = 2048
+    data, sep, ends, seg_lens = _pack(streams, S)
+    mc = S // P.min_size + 2 * ends.shape[1] + 2
+    ob, oc, of, ol = ref.packed_pipeline(data, seg_lens, P, max_chunks=mc)
+    kb, kc, kf, kl = packed_pipeline_batch(
+        jnp.asarray(data), jnp.asarray(sep), jnp.asarray(ends), P,
+        max_chunks=mc, tile=1024, interpret=True)
+    np.testing.assert_array_equal(oc, np.asarray(kc))
+    np.testing.assert_array_equal(ob, np.asarray(kb))
+    np.testing.assert_array_equal(of, np.asarray(kf))
+    np.testing.assert_array_equal(ol, np.asarray(kl))
+
+
+def test_limb_boundary_row(rng):
+    """A 65535-byte segment plus a 1-byte one fill a 65536-wide row — the
+    exactness bound of the 16-bit limb cumsums the fingerprints ride on.
+    (Split path only: the invariant under test is the hash math at the
+    row-length limit, not the fused kernel's tiling.)"""
+    r = lambda n: rng.integers(0, 256, n, dtype=np.uint8).tobytes()
+    _assert_matches_oracle([[r(65535), r(1)]], S=65536, fused=False,
+                           label="limb-boundary")
+
+
+def test_packed_row_too_wide_rejected():
+    """The fused packed kernel's in-graph prefix operands are only exact
+    for rows <= 65536 entries; wider rows must refuse loudly."""
+    data = np.zeros((1, 1 << 17), np.uint8)
+    sep = np.full((1, 1 << 17), 100, np.int32)
+    ends = np.full((1, 2), 100, np.int32)
+    with pytest.raises(ValueError, match="narrower"):
+        ops.packed_pipeline(jnp.asarray(data), jnp.asarray(sep),
+                            jnp.asarray(ends), P, max_chunks=8)
+
+
+# -- kernel-level property sweep --------------------------------------------------
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 10_000), mode=st.sampled_from(
+    ("random", "lowent", "zeros", "mixed")))
+def test_property_random_segment_mixes(seed, mode):
+    """Random segment mixes (entropy regime per `mode`) packed into 2 KiB
+    rows: both packed device paths must equal the per-stream oracle."""
+    rng = np.random.default_rng(seed)
+    S = 2048
+
+    def seg(n):
+        if mode == "zeros":
+            return bytes(n)
+        if mode == "lowent":
+            return rng.integers(0, 4, n, dtype=np.uint8).tobytes()
+        if mode == "mixed" and rng.random() < 0.5:
+            return bytes(n)
+        return rng.integers(0, 256, n, dtype=np.uint8).tobytes()
+
+    streams = []
+    for _ in range(int(rng.integers(1, 4))):
+        row, fill = [], 0
+        while fill < S:
+            n = int(rng.integers(0, 900))
+            if fill + n > S:
+                break
+            row.append(seg(n))
+            fill += n
+        if not row:
+            row = [seg(1)]
+        streams.append(row)
+    _assert_matches_oracle(streams, S, label=f"prop/{mode}/{seed}")
+
+
+# -- scheduler level ---------------------------------------------------------------
+
+def test_scheduler_packed_equals_off(rng):
+    """Edge-length traffic through a packed scheduler returns the same
+    ChunkResults as the packing-off scheduler (which is itself pinned
+    bit-identical to per-stream chunking by test_service.py)."""
+    lengths = [0, 1, 2, P.seq_length - 1, P.min_size, P.max_size,
+               P.max_size + 1, 100, 555, 1000, 1023]
+    streams = [rng.integers(0, 256, n, dtype=np.uint8) for n in lengths]
+    streams += [np.zeros(700, dtype=np.uint8),
+                (np.arange(900) % 256).astype(np.uint8)]
+
+    def run(packing):
+        sched = ChunkScheduler(P, slots=4, min_bucket=1024,
+                               packing_impl=packing,
+                               cross_check_packing=(packing == "segments"))
+        for i, s in enumerate(streams):
+            sched.submit(s, tag=i)
+        return sched, sched.drain()
+
+    _, off = run("off")
+    sched_on, on = run("segments")
+    assert [r.tag for r in on] == [r.tag for r in off]
+    for a, b in zip(off, on):
+        np.testing.assert_array_equal(a.bounds, b.bounds, f"tag {a.tag}")
+        np.testing.assert_array_equal(a.fps, b.fps, f"tag {a.tag}")
+        np.testing.assert_array_equal(a.lengths, b.lengths, f"tag {a.tag}")
+    # every sub-bucket stream actually rode a packed row (the empty one
+    # short-circuits; the 1023/1000-byte ones are still < min_bucket)
+    assert sched_on.stats.packed_streams == len(streams) - 1
+    assert sched_on.stats.tail_bytes == 0  # packed results skip the redo
+    assert sched_on._packing_checked  # the guard ran on the first dispatch
+    snap = sched_on.obs.snapshot()
+    assert snap["counters"]["sched.cross_checks{kind=packing}"] == 1
+    # occupancy gauges for packed dispatches live on their own series
+    assert any("packed=1" in k for k in snap["gauges"]), snap["gauges"]
+
+
+def test_scheduler_pack_queue_flushes_on_capacity():
+    """The pack queue dispatches on its own once a device batch of packed
+    rows is payload-full — no drain() needed (continuous batching)."""
+    sched = ChunkScheduler(P, slots=2, min_bucket=1024,
+                           packing_impl="segments")
+    rng = np.random.default_rng(1)
+    n = 0
+    while sched.stats.dispatches == 0:
+        sched.submit(rng.integers(0, 256, 800, dtype=np.uint8))
+        n += 1
+        assert n < 100, "pack queue never dispatched"
+    # 2 slots x 1024 bytes of capacity / 800-byte streams: fires at 3
+    assert n == 3
+    assert sched.stats.packed_streams == 3
+
+
+@settings(max_examples=6, deadline=None)
+@given(data=st.binary(min_size=0, max_size=1500))
+def test_property_scheduler_roundtrip(data):
+    """Any byte-string (plus tiny derived variants) chunks identically
+    through the packed and unpacked schedulers."""
+    corpus = [data, data[:1], data[: len(data) // 2], data + data[:100]]
+
+    def run(packing):
+        sched = ChunkScheduler(P, slots=4, min_bucket=1024,
+                               packing_impl=packing)
+        for i, d in enumerate(corpus):
+            sched.submit(np.frombuffer(d, dtype=np.uint8), tag=i)
+        return sched.drain()
+
+    for a, b in zip(run("off"), run("segments")):
+        np.testing.assert_array_equal(a.bounds, b.bounds)
+        np.testing.assert_array_equal(a.fps, b.fps)
+
+
+# -- knob / guard plumbing ---------------------------------------------------------
+
+def test_env_default(monkeypatch):
+    monkeypatch.setenv("REPRO_PACKING_IMPL", "segments")
+    assert ChunkScheduler(P, min_bucket=1024).packing_impl == "segments"
+    monkeypatch.delenv("REPRO_PACKING_IMPL")
+    assert ChunkScheduler(P, min_bucket=1024).packing_impl == "off"
+
+
+def test_bad_packing_impl_rejected():
+    with pytest.raises(ValueError, match="packing_impl"):
+        ChunkScheduler(P, min_bucket=1024, packing_impl="zip")
+
+
+def test_min_bucket_beyond_limb_limit_rejected():
+    """Packed rows lean on the 65536-entry limb-exactness bound, so a
+    min_bucket above it must refuse packing up front, not corrupt hashes."""
+    with pytest.raises(ValueError, match="min_bucket"):
+        ChunkScheduler(P, min_bucket=1 << 17, packing_impl="segments")
+    # same geometry is fine with packing off
+    ChunkScheduler(P, min_bucket=1 << 17, packing_impl="off")
+
+
+def _tiny_streams(rng, count, lo=100, hi=900):
+    return [rng.integers(0, 256, int(rng.integers(lo, hi)), dtype=np.uint8)
+            for _ in range(count)]
+
+
+def test_divergence_injection_split(monkeypatch, rng):
+    """A corrupted packed split runner must trip PackingDivergenceError on
+    the first dispatch.  min_bucket=4096 gives this test its own device
+    shape, so the corrupted function is what actually gets traced."""
+    real = sched_mod._run_packed_split
+
+    def corrupt(x, sep, ends, p, mc, mask_impl, fp_impl, with_fp):
+        b, c, f, l = real(x, sep, ends, p, mc, mask_impl, fp_impl, with_fp)
+        return b.at[:, 0].add(1), c, f, l
+
+    monkeypatch.setattr(sched_mod, "_run_packed_split", corrupt)
+    sched = ChunkScheduler(P, slots=2, min_bucket=4096,
+                           packing_impl="segments", cross_check_packing=True)
+    for s in _tiny_streams(rng, 3):
+        sched.submit(s)
+    with pytest.raises(PackingDivergenceError, match="diverged"):
+        sched.drain()
+
+
+def test_divergence_injection_fused(monkeypatch, rng):
+    """Same guard through the fused packed kernel path (its own 8 KiB
+    shape), corrupting a fingerprint instead of a boundary."""
+    real = sched_mod._run_packed_fused
+
+    def corrupt(x, sep, ends, p, mc):
+        b, c, f, l = real(x, sep, ends, p, mc)
+        return b, c, f.at[:, 0, 0].add(1), l
+
+    monkeypatch.setattr(sched_mod, "_run_packed_fused", corrupt)
+    sched = ChunkScheduler(P, slots=2, min_bucket=8192,
+                           packing_impl="segments", pipeline_impl="fused",
+                           cross_check_packing=True)
+    for s in _tiny_streams(rng, 3):
+        sched.submit(s)
+    with pytest.raises(PackingDivergenceError, match="diverged"):
+        sched.drain()
+
+
+def test_guard_off_by_default(rng):
+    """Without cross_check_packing nothing replays: one packed dispatch,
+    no cross-check counter."""
+    sched = ChunkScheduler(P, slots=2, min_bucket=1024,
+                           packing_impl="segments")
+    for s in _tiny_streams(rng, 3, lo=200, hi=400):
+        sched.submit(s)
+    sched.drain()
+    snap = sched.obs.snapshot()
+    assert "sched.cross_checks{kind=packing}" not in snap["counters"]
+    assert not sched._packing_checked

@@ -1,11 +1,11 @@
 """Differential harness: the impl matrix must be bit-identical everywhere.
 
 Every combination of ``pipeline_impl`` x ``mask_impl`` x ``fp_impl`` x
-shard count must produce *exactly* the same service state — same recipes
-(chunk keys, lengths, packed fingerprints, object digests), same stored
-bytes, same restored streams — because every selector is documented as
-bit-identical and the sharded router consumes the fingerprints the device
-produced.  This file makes that a tested invariant instead of a
+``packing_impl`` x shard count must produce *exactly* the same service
+state — same recipes (chunk keys, lengths, packed fingerprints, object
+digests), same stored bytes, same restored streams — because every
+selector is documented as bit-identical and the sharded router consumes
+the fingerprints the device produced.  This file makes that a tested invariant instead of a
 convention: a baseline service (split / jnp / reference / 1 store) ingests
 an adversarial corpus, and every other configuration is diffed against it
 field by field.
@@ -34,6 +34,7 @@ P = SeqCDCParams(avg_size=256, seq_length=3, skip_trigger=6, skip_size=32,
 PIPELINES = ("split", "fused")
 MASKS = ("jnp", "pallas")
 FPS = ("reference", "pallas")
+PACKINGS = ("off", "segments")
 SHARDS = (1, 2, 4)
 
 
@@ -102,30 +103,37 @@ def baseline_state():
     return state
 
 
+@pytest.mark.parametrize("packing_impl", PACKINGS)
 @pytest.mark.parametrize("fp_impl", FPS)
 @pytest.mark.parametrize("mask_impl", MASKS)
 @pytest.mark.parametrize("pipeline_impl", PIPELINES)
 def test_matrix_single_store(pipeline_impl, mask_impl, fp_impl,
-                             baseline_state):
+                             packing_impl, baseline_state):
     svc = _ingest(DedupService(
         params=P, slots=2, min_bucket=1024, pipeline_impl=pipeline_impl,
-        mask_impl=mask_impl, fp_impl=fp_impl, cross_check_pipeline=True,
+        mask_impl=mask_impl, fp_impl=fp_impl, packing_impl=packing_impl,
+        cross_check_pipeline=True, cross_check_packing=True,
     ))
-    label = f"{pipeline_impl}/{mask_impl}/{fp_impl}"
+    label = f"{pipeline_impl}/{mask_impl}/{fp_impl}/{packing_impl}"
     _assert_same_state(_service_state(svc), baseline_state, label)
     if pipeline_impl == "fused":  # the guard ran, not just the dispatch
         assert svc.scheduler._pipeline_checked_buckets
+    if packing_impl == "segments":  # likewise for the packing guard
+        assert svc.scheduler._packing_checked, label
 
 
+@pytest.mark.parametrize("packing_impl", PACKINGS)
 @pytest.mark.parametrize("num_shards", SHARDS)
 @pytest.mark.parametrize("pipeline_impl", PIPELINES)
-def test_matrix_sharded(pipeline_impl, num_shards, baseline_state):
+def test_matrix_sharded(pipeline_impl, num_shards, packing_impl,
+                        baseline_state):
     with ShardedDedupService(
         num_shards, params=P, slots=2, min_bucket=1024,
-        pipeline_impl=pipeline_impl, cross_check_pipeline=True,
+        pipeline_impl=pipeline_impl, packing_impl=packing_impl,
+        cross_check_pipeline=True, cross_check_packing=True,
     ) as svc:
         _ingest(svc)
-        label = f"shards={num_shards}/{pipeline_impl}"
+        label = f"shards={num_shards}/{pipeline_impl}/{packing_impl}"
         _assert_same_state(_service_state(svc), baseline_state, label)
         # the shard maps themselves must agree: routing consumed the
         # device fingerprints, which were just asserted identical
@@ -156,9 +164,10 @@ def test_matrix_limb_boundary_chunks():
        pipeline_impl=st.sampled_from(PIPELINES),
        mask_impl=st.sampled_from(MASKS),
        fp_impl=st.sampled_from(FPS),
+       packing_impl=st.sampled_from(PACKINGS),
        num_shards=st.sampled_from(SHARDS))
 def test_property_matrix_random_corpus(data, pipeline_impl, mask_impl,
-                                       fp_impl, num_shards):
+                                       fp_impl, packing_impl, num_shards):
     """Random corpora through a random matrix cell vs the baseline cell:
     three objects (the stream, a duplicate-rich variant, a tiny slice) so
     dedup actually fires."""
@@ -168,9 +177,11 @@ def test_property_matrix_random_corpus(data, pipeline_impl, mask_impl,
     with ShardedDedupService(
         num_shards, params=P, slots=2, min_bucket=1024,
         pipeline_impl=pipeline_impl, mask_impl=mask_impl, fp_impl=fp_impl,
+        packing_impl=packing_impl,
     ) as svc:
         _ingest(svc, corpus)
         _assert_same_state(
             _service_state(svc, corpus), _service_state(base, corpus),
-            f"prop {pipeline_impl}/{mask_impl}/{fp_impl}/N={num_shards}",
+            f"prop {pipeline_impl}/{mask_impl}/{fp_impl}/{packing_impl}"
+            f"/N={num_shards}",
         )

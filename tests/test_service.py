@@ -60,18 +60,25 @@ def test_scheduler_bit_identical_mixed_lengths(rng):
 
 
 def test_scheduler_partial_batch_padding(rng):
-    """A drained partial bucket (zero-row padded) is still exact."""
+    """A drained partial bucket dispatches only the rows it has — one
+    pending stream ships one device row, not ``slots`` zero-padded rows."""
     sched = ChunkScheduler(P, slots=8, min_bucket=1024)
     d = rng.integers(0, 256, 3000, dtype=np.uint8)
     sched.submit(d)
     (r,) = sched.drain()
     assert r.bounds.tolist() == _exact(d)
-    assert sched.stats.padded_rows == 7
+    assert sched.stats.padded_rows == 0
+    assert sched.stats.device_rows == 1  # exactly the rows needed, no more
     assert sched.stats.dispatches == 1
+    # device traffic is one bucket row, not slots-of-them
+    assert sched.stats.device_bytes == 3072  # bucket_for(3000) == 3072
 
 
 def test_scheduler_fills_bucket_dispatches_early(rng):
-    sched = ChunkScheduler(P, slots=2, min_bucket=1024)
+    # packing off: pins the bucket path's fill-triggered dispatch (under
+    # REPRO_PACKING_IMPL=segments these sub-min_bucket streams would
+    # queue for a packed row instead)
+    sched = ChunkScheduler(P, slots=2, min_bucket=1024, packing_impl="off")
     sched.submit(rng.integers(0, 256, 600, dtype=np.uint8))
     assert sched.stats.dispatches == 0
     sched.submit(rng.integers(0, 256, 900, dtype=np.uint8))

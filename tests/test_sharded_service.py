@@ -307,8 +307,11 @@ def test_scheduler_pallas_bit_identity(rng):
 def test_mask_divergence_raises(rng, monkeypatch):
     """The guard fires when the two backends disagree (simulated)."""
     import repro.core.seqcdc as seqcdc_mod
+    # packing off: pins the *bucket* path's guard, which fires at submit
+    # time (under REPRO_PACKING_IMPL=segments the 900-byte stream would
+    # queue for a packed row instead)
     sched = ChunkScheduler(P, slots=1, min_bucket=1024, mask_impl="jnp",
-                           cross_check_masks=True)
+                           cross_check_masks=True, packing_impl="off")
     real = seqcdc_mod.boundaries_batch
 
     def lying(data, p, **kw):
