@@ -1,0 +1,207 @@
+"""Perf-regression gate: diff a fresh bench run against a committed baseline.
+
+    python scripts/bench_compare.py BENCH_quick.json BENCH_ci_quick.json
+
+Matches rows between the two reports by their identity fields (bench title
+plus every configuration axis — shards, transport, impl selections, corpus
+shape) and checks each watched metric of every matched pair against a
+tolerance band, exiting non-zero when any check fails — the first
+automated consumer of the BENCH_*.json trajectory (docs/OBSERVABILITY.md).
+
+Two tolerance classes, because the two failure modes differ:
+
+* **throughput** (``ingest_gbps``, ``restore_gbps``, ``gbits_per_s``,
+  ``speedup_vs_*``) is machine-dependent — CI hardware is not the host
+  that recorded the committed baseline, and quick-budget corpora are
+  small enough that jit compile time dominates.  The band is deliberately
+  loose (fail below ``--throughput-ratio`` x baseline, default 0.25):
+  it catches an order-of-magnitude collapse (a kernel silently falling
+  back to the scalar path), not a noisy 20%.
+* **quality** (``occupancy``/``batch_occupancy``/``row_fill``, absolute
+  ``--occupancy-tol``; ``dedup_ratio``, relative ``--dedup-tol``) is
+  machine-independent: same code + same seeded corpus = same value, so
+  the bands are tight.  These are the real regression signals — a packing
+  or boundary change that wastes device rows or loses dedup shows up
+  here on any hardware.
+
+A baseline row with no fresh counterpart fails the gate too (a benchmark
+that silently stopped running is a coverage regression, not a pass), as
+does a fresh report whose ``meta.failed_modules`` is non-empty.  Fresh
+rows with no baseline counterpart are reported but pass — that's how new
+benchmarks land before their first committed baseline.
+
+Exit codes: 0 = within bands, 1 = regression, 2 = unusable input.
+Stdlib-only, like everything under ``repro.obs``.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import sys
+from typing import Dict, List, Optional, Tuple
+
+#: the fields that *identify* a row (everything else is a measurement);
+#: absent fields simply don't participate in the key, so reports from
+#: before/after a new axis was added still match on the shared axes
+IDENTITY_FIELDS = (
+    "bench", "budget", "figure", "primitive", "dist", "shards",
+    "async_flush", "transport", "mask_impl", "step_impl", "fp_impl",
+    "pipeline_impl", "packing_impl", "fingerprints", "stream_mb",
+    "block_w", "buckets", "streams", "versions",
+)
+
+#: watched metrics -> tolerance class ("throughput" | "occupancy" | "dedup");
+#: all are higher-better
+WATCHED = {
+    "ingest_gbps": "throughput",
+    "restore_gbps": "throughput",
+    "raw_chunk_gbps": "throughput",
+    "gbits_per_s": "throughput",
+    "speedup_vs_reference": "throughput",
+    "speedup_vs_split": "throughput",
+    "occupancy": "occupancy",
+    "batch_occupancy": "occupancy",
+    "row_fill": "occupancy",
+    "dedup_ratio": "dedup",
+}
+
+
+@dataclasses.dataclass
+class Tolerances:
+    throughput_ratio: float = 0.25  # fail below this fraction of baseline
+    occupancy_tol: float = 0.10     # absolute drop allowed
+    dedup_tol: float = 0.01         # relative drop allowed
+
+
+def row_key(row: dict) -> Tuple:
+    """Hashable identity of one result row (its configuration axes)."""
+    return tuple((f, row[f]) for f in IDENTITY_FIELDS if f in row)
+
+
+def _index(report: dict) -> Dict[Tuple, dict]:
+    out: Dict[Tuple, dict] = {}
+    for row in report.get("results", []):
+        out[row_key(row)] = row
+    return out
+
+
+def _check(metric: str, base: float, fresh: float,
+           tol: Tolerances) -> Tuple[bool, str]:
+    """-> (ok, band description) for one watched metric pair."""
+    kind = WATCHED[metric]
+    if kind == "throughput":
+        floor = base * tol.throughput_ratio
+        return fresh >= floor, f">= {floor:.4g} ({tol.throughput_ratio}x)"
+    if kind == "occupancy":
+        floor = base - tol.occupancy_tol
+        return fresh >= floor, f">= {floor:.4g} (-{tol.occupancy_tol} abs)"
+    floor = base * (1.0 - tol.dedup_tol)
+    return fresh >= floor, f">= {floor:.4g} (-{tol.dedup_tol:.0%} rel)"
+
+
+def compare(baseline: dict, fresh: dict,
+            tol: Optional[Tolerances] = None) -> Tuple[List[dict], List[str]]:
+    """Diff two bench reports -> (per-metric comparison rows, failures).
+
+    Every returned comparison row carries ``bench``/``config``/``metric``/
+    ``baseline``/``fresh``/``band``/``ok``; ``failures`` is the list of
+    human-readable failure lines (empty = the gate passes).
+    """
+    tol = tol or Tolerances()
+    rows: List[dict] = []
+    failures: List[str] = []
+    failed_mods = fresh.get("meta", {}).get("failed_modules") or []
+    if failed_mods:
+        failures.append(f"fresh run had failed modules: {failed_mods}")
+    base_idx, fresh_idx = _index(baseline), _index(fresh)
+    for key, brow in base_idx.items():
+        frow = fresh_idx.get(key)
+        config = ", ".join(f"{f}={v}" for f, v in key if f != "bench")
+        bench = brow.get("bench", "?")
+        if frow is None:
+            failures.append(
+                f"baseline row missing from fresh run: {bench} [{config}]"
+            )
+            continue
+        for metric, _kind in WATCHED.items():
+            if metric not in brow or metric not in frow:
+                continue
+            base_v, fresh_v = float(brow[metric]), float(frow[metric])
+            ok, band = _check(metric, base_v, fresh_v, tol)
+            rows.append({
+                "bench": bench, "config": config, "metric": metric,
+                "baseline": base_v, "fresh": fresh_v, "band": band,
+                "ok": ok,
+            })
+            if not ok:
+                failures.append(
+                    f"REGRESSION {metric}: {fresh_v:.4g} vs baseline "
+                    f"{base_v:.4g} (band {band}) in {bench} [{config}]"
+                )
+    extra = [k for k in fresh_idx if k not in base_idx]
+    for key in extra:
+        bench = fresh_idx[key].get("bench", "?")
+        config = ", ".join(f"{f}={v}" for f, v in key if f != "bench")
+        rows.append({
+            "bench": bench, "config": config, "metric": "(new row)",
+            "baseline": None, "fresh": None,
+            "band": "no baseline yet", "ok": True,
+        })
+    return rows, failures
+
+
+def _load(path: str) -> dict:
+    try:
+        with open(path, encoding="utf-8") as f:
+            doc = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"{path}: unreadable bench report ({e})", file=sys.stderr)
+        raise SystemExit(2) from e
+    if not isinstance(doc, dict) or "results" not in doc:
+        print(f"{path}: not a benchmarks/run.py report", file=sys.stderr)
+        raise SystemExit(2)
+    return doc
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("baseline", help="committed BENCH_*.json")
+    ap.add_argument("fresh", help="freshly produced BENCH_*.json")
+    ap.add_argument("--throughput-ratio", type=float,
+                    default=Tolerances.throughput_ratio,
+                    help="fail when throughput < RATIO x baseline "
+                         "(machine-dependent, so loose by default)")
+    ap.add_argument("--occupancy-tol", type=float,
+                    default=Tolerances.occupancy_tol,
+                    help="absolute occupancy/row_fill drop allowed")
+    ap.add_argument("--dedup-tol", type=float,
+                    default=Tolerances.dedup_tol,
+                    help="relative dedup_ratio drop allowed")
+    args = ap.parse_args(argv)
+    tol = Tolerances(throughput_ratio=args.throughput_ratio,
+                     occupancy_tol=args.occupancy_tol,
+                     dedup_tol=args.dedup_tol)
+    rows, failures = compare(_load(args.baseline), _load(args.fresh), tol)
+    compared = sum(1 for r in rows if r["metric"] != "(new row)")
+    print(f"compared {compared} metrics across "
+          f"{len({(r['bench'], r['config']) for r in rows})} rows "
+          f"({args.baseline} -> {args.fresh})")
+    for r in rows:
+        if r["metric"] == "(new row)":
+            print(f"  NEW   {r['bench']} [{r['config']}]")
+        elif not r["ok"]:
+            print(f"  FAIL  {r['metric']}: {r['fresh']:.4g} "
+                  f"(baseline {r['baseline']:.4g}, band {r['band']}) "
+                  f"{r['bench']} [{r['config']}]")
+    if failures:
+        print(f"\n{len(failures)} failure(s):", file=sys.stderr)
+        for f in failures:
+            print(f"  {f}", file=sys.stderr)
+        return 1
+    print("all watched metrics within tolerance bands")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -9,7 +9,13 @@ Seconds-fast smoke for ``repro.obs`` and its wiring (docs/OBSERVABILITY.md):
   3. remote telemetry — a 2-shard remote service's ``metrics()`` returns
      live per-server snapshots whose RPC calls/bytes agree exactly with the
      client-side counters, op by op;
-  4. ``scripts/obs_report.py`` renders all three artifact kinds.
+  4. causal tracing across the wire — a remote ``put()`` with ``REPRO_TRACE``
+     set (before the servers spawn, so they inherit it) emits spans that
+     reconstruct into one connected tree: client, writer-thread, and
+     shard-server spans all share the request's ``trace_id`` and every
+     ``parent_id`` resolves inside the file;
+  5. ``scripts/obs_report.py`` renders all three artifact kinds, including
+     the per-request latency and critical-path views of the causal trace.
 
 Exits non-zero on failure.
 """
@@ -101,17 +107,67 @@ with tempfile.TemporaryDirectory() as tmp:
     finally:
         svc.close()
 
-    # 4) obs_report renders every artifact kind
+    # 4) causal tracing across the wire: one remote put -> one connected tree
+    causal = os.path.join(tmp, "causal.jsonl")
+    os.environ["REPRO_TRACE"] = causal  # before open(): servers inherit it
+    try:
+        svc = ShardedDedupService.open(os.path.join(tmp, "depot2"), 2,
+                                       transport="remote", params=P, slots=4,
+                                       min_bucket=1024)
+        try:
+            svc.put("obj", versions[0])
+        finally:
+            svc.close()
+    finally:
+        del os.environ["REPRO_TRACE"]
+    recs = []
+    with open(causal) as f:
+        for line in f:
+            try:
+                recs.append(json.loads(line))
+            except json.JSONDecodeError:
+                pass  # torn tail line
+    by_id = {r["span_id"]: r for r in recs}
+    puts = [r for r in recs if r["name"] == "request" and r.get("op") == "put"]
+    if len(puts) != 1:
+        print(f"[causal] expected one put request root, got {len(puts)}")
+        fail += 1
+    else:
+        root = puts[0]
+        members = [r for r in recs if r["trace_id"] == root["trace_id"]]
+        names = {r["name"] for r in members}
+        for want in ("rpc.client", "rpc.server", "writer.task",
+                     "service.flush"):
+            if want not in names:
+                print(f"[causal] no {want!r} span joined the put tree "
+                      f"(saw {sorted(names)})")
+                fail += 1
+        if len({r["pid"] for r in members}) < 2:
+            print("[causal] put tree never crossed a process boundary")
+            fail += 1
+        for r in members:
+            if r["span_id"] == root["span_id"]:
+                continue
+            parent = by_id.get(r.get("parent_id"))
+            if parent is None or parent["trace_id"] != root["trace_id"]:
+                print(f"[causal] orphan span {r['name']!r}: parent_id "
+                      f"{r.get('parent_id')!r} not in the put tree")
+                fail += 1
+
+    # 5) obs_report renders every artifact kind (incl. the causal views)
     mpath = os.path.join(tmp, "metrics.json")
     with open(mpath, "w") as f:
         json.dump(m, f)
     report = os.path.join(os.path.dirname(__file__), "obs_report.py")
-    for art in (mpath, trace):
+    for art in (mpath, trace, causal):
         r = subprocess.run([sys.executable, report, art],
                            capture_output=True, text=True)
         if r.returncode != 0 or not r.stdout.strip():
             print(f"[report] obs_report.py failed on {art}: {r.stderr}")
             fail += 1
+    if "critical path: slowest 'put' request" not in r.stdout:
+        print("[report] causal trace rendered without a put critical path")
+        fail += 1
 
 print("dev_check_obs:", "FAIL" if fail else "OK")
 sys.exit(1 if fail else 0)

@@ -14,7 +14,13 @@ Accepts any of the three on-disk shapes the observability layer produces
 * a ``benchmarks/run.py`` report — provenance header plus one metrics
   section per captured service (the report's ``metrics`` key);
 * a ``REPRO_TRACE`` JSONL file — per-span-name aggregation (count, total
-  and p95 wall seconds, CPU/wall ratio, total bytes).
+  and p95 wall seconds, CPU/wall ratio, total bytes), plus the causal
+  views the v2 trace schema enables: per-op request latency percentiles
+  (p50/p95/p99 end-to-end, with the dominant phase from each request
+  root's recorded partition) and the critical path of the slowest request
+  per op, reconstructed from the ``trace_id``/``span_id``/``parent_id``
+  linkage (spans from every process that appended to the file — writer
+  threads, shard servers — stitch into one tree per request).
 
 Stdlib-only, like everything under ``repro.obs``.
 """
@@ -99,31 +105,38 @@ def render_bench(report: dict):
         render_metrics(m)
 
 
-def trace_summary(path: str) -> list[dict]:
-    """Aggregate a JSONL trace per span name."""
-    agg: dict[str, dict] = {}
+def load_trace(path: str) -> list[dict]:
+    """Parse a JSONL trace, skipping blank and torn lines."""
+    out = []
     with open(path, encoding="utf-8") as f:
         for line in f:
             line = line.strip()
             if not line:
                 continue
             try:
-                rec = json.loads(line)
+                out.append(json.loads(line))
             except json.JSONDecodeError:
                 continue  # torn tail line from a killed process
-            a = agg.setdefault(rec.get("name", "?"), {
-                "count": 0, "wall_s": 0.0, "cpu_s": 0.0, "bytes": 0,
-                "errors": 0, "walls": [],
-            })
-            a["count"] += 1
-            a["wall_s"] += rec.get("wall_s", 0.0)
-            a["cpu_s"] += rec.get("cpu_s", 0.0)
-            for k in ("bytes", "payload_bytes", "recv_bytes"):
-                if k in rec:
-                    a["bytes"] += rec[k]
-                    break
-            a["errors"] += 1 if "error" in rec else 0
-            a["walls"].append(rec.get("wall_s", 0.0))
+    return out
+
+
+def trace_summary(records: list[dict]) -> list[dict]:
+    """Aggregate trace records per span name."""
+    agg: dict[str, dict] = {}
+    for rec in records:
+        a = agg.setdefault(rec.get("name", "?"), {
+            "count": 0, "wall_s": 0.0, "cpu_s": 0.0, "bytes": 0,
+            "errors": 0, "walls": [],
+        })
+        a["count"] += 1
+        a["wall_s"] += rec.get("wall_s", 0.0)
+        a["cpu_s"] += rec.get("cpu_s", 0.0)
+        for k in ("bytes", "payload_bytes", "recv_bytes"):
+            if k in rec:
+                a["bytes"] += rec[k]
+                break
+        a["errors"] += 1 if "error" in rec else 0
+        a["walls"].append(rec.get("wall_s", 0.0))
     rows = []
     for name, a in sorted(agg.items()):
         buckets: dict[int, int] = {}
@@ -138,6 +151,122 @@ def trace_summary(path: str) -> list[dict]:
             "bytes": a["bytes"], "errors": a["errors"],
         })
     return rows
+
+
+# -- causal views (v2 trace schema: trace_id/span_id/parent_id) -----------------
+def build_trees(records: list[dict]):
+    """Index the causal linkage -> (span_id -> record, span_id -> children).
+
+    Children are sorted by start time (``ts - wall_s``; ``ts`` is recorded
+    at span *end*).  A record whose ``parent_id`` is absent from the file
+    (its parent's process was killed mid-write) simply roots its own
+    subtree — the views below degrade instead of failing.
+    """
+    by_id = {r["span_id"]: r for r in records if "span_id" in r}
+    children: dict[str, list[dict]] = {}
+    for r in records:
+        pid = r.get("parent_id")
+        if pid and pid in by_id:
+            children.setdefault(pid, []).append(r)
+    for kids in children.values():
+        kids.sort(key=lambda r: r.get("ts", 0.0) - r.get("wall_s", 0.0))
+    return by_id, children
+
+
+def _pct(sorted_vals: list[float], q: float) -> float:
+    """Exact nearest-rank percentile (the samples are all retained here,
+    unlike the registry's bucketed approximation)."""
+    if not sorted_vals:
+        return 0.0
+    rank = max(1, -(-int(q * 1000) * len(sorted_vals) // 1000))
+    return sorted_vals[min(rank, len(sorted_vals)) - 1]
+
+
+def request_rows(records: list[dict]) -> list[dict]:
+    """Per-op end-to-end latency percentiles with dominant-phase attribution.
+
+    One row per ``op`` over the ``request`` root spans: count, p50/p95/p99
+    of ``wall_s``, and the phase holding the largest share of the op's
+    total time (from each root's recorded ``phases`` partition — the same
+    numbers the ``req.latency_s{op=,phase=}`` histograms hold).
+    """
+    per_op: dict[str, dict] = {}
+    for r in records:
+        if r.get("name") != "request":
+            continue
+        a = per_op.setdefault(str(r.get("op", "?")),
+                              {"walls": [], "phases": {}})
+        a["walls"].append(r.get("wall_s", 0.0))
+        for ph, secs in (r.get("phases") or {}).items():
+            a["phases"][ph] = a["phases"].get(ph, 0.0) + secs
+    rows = []
+    for op, a in sorted(per_op.items()):
+        walls = sorted(a["walls"])
+        total = sum(a["phases"].values())
+        dom, dom_s = ("?", 0.0)
+        if a["phases"]:
+            dom, dom_s = max(a["phases"].items(), key=lambda kv: kv[1])
+        rows.append({
+            "op": op, "count": len(walls),
+            "p50_s": _pct(walls, 0.50), "p95_s": _pct(walls, 0.95),
+            "p99_s": _pct(walls, 0.99), "max_s": walls[-1],
+            "dominant_phase": dom,
+            "dominant_share": dom_s / total if total else 0.0,
+        })
+    return rows
+
+
+def critical_path(root: dict, children: dict[str, list[dict]]) -> list[dict]:
+    """The heaviest child chain under ``root``: at each level descend into
+    the child with the largest ``wall_s`` — the path a latency fix must
+    shorten.  ``self_s`` is each node's wall minus its children's."""
+    path = []
+    node, depth = root, 0
+    while node is not None:
+        kids = children.get(node.get("span_id", ""), [])
+        kid_wall = sum(k.get("wall_s", 0.0) for k in kids)
+        label = node.get("name", "?")
+        for extra in ("op", "bucket", "shard"):
+            if extra in node:
+                label += f" {extra}={node[extra]}"
+        path.append({
+            "span": ("  " * depth) + label,
+            "wall_s": node.get("wall_s", 0.0),
+            "self_s": max(0.0, node.get("wall_s", 0.0) - kid_wall),
+            "frac_of_root": (node.get("wall_s", 0.0) /
+                             root["wall_s"] if root.get("wall_s") else 0.0),
+            "pid": node.get("pid", ""),
+            "thread": node.get("thread", ""),
+        })
+        node = max(kids, key=lambda k: k.get("wall_s", 0.0),
+                   default=None)
+        depth += 1
+    return path
+
+
+def critical_path_views(records: list[dict]) -> dict[str, list[dict]]:
+    """op -> critical-path rows of that op's slowest request."""
+    _, children = build_trees(records)
+    slowest: dict[str, dict] = {}
+    for r in records:
+        if r.get("name") != "request":
+            continue
+        op = str(r.get("op", "?"))
+        if (op not in slowest
+                or r.get("wall_s", 0.0) > slowest[op].get("wall_s", 0.0)):
+            slowest[op] = r
+    return {op: critical_path(root, children)
+            for op, root in sorted(slowest.items())}
+
+
+def render_trace(path: str):
+    records = load_trace(path)
+    _table(trace_summary(records), f"trace summary: {path}")
+    req = request_rows(records)
+    if req:
+        _table(req, "request latency (end-to-end, per op)")
+        for op, rows in critical_path_views(records).items():
+            _table(rows, f"critical path: slowest {op!r} request")
 
 
 def classify(path: str):
@@ -173,12 +302,16 @@ def main(argv=None) -> int:
     args = ap.parse_args(argv)
     kind, doc = classify(args.path)
     if kind == "trace":
-        rows = trace_summary(args.path)
         if args.json:
-            json.dump(rows, sys.stdout, indent=1)
+            records = load_trace(args.path)
+            json.dump({
+                "spans": trace_summary(records),
+                "requests": request_rows(records),
+                "critical_paths": critical_path_views(records),
+            }, sys.stdout, indent=1)
             print()
         else:
-            _table(rows, f"trace summary: {args.path}")
+            render_trace(args.path)
     elif args.json:
         json.dump(doc, sys.stdout, indent=1)
         print()

@@ -7,9 +7,15 @@ The measurement substrate every service layer reports through
   histograms with p50/p95/p99 export; :func:`merge_snapshots` aggregates
   many snapshots (e.g. the per-shard-server ones fetched over the wire by
   ``ShardedDedupService.metrics()``) into one.
-* :func:`span` — pipeline tracing context manager emitting JSONL records
-  (wall/CPU time + byte counts) when ``REPRO_TRACE`` is set; a shared
-  no-op otherwise.
+* :func:`span` — causal tracing context manager emitting JSONL records
+  (trace/span/parent IDs + wall/CPU time + byte counts) when
+  ``REPRO_TRACE`` is set; a shared no-op otherwise.  :func:`current_context`
+  and :func:`scope` carry the causal chain across thread and process seams
+  (writer queue, shard RPC).
+* :class:`PhaseClock` — exact wall-time partitioner behind the
+  ``req.latency_s{op=,phase=}`` request histograms: phases tile the
+  request's wall time by construction, so per-phase sums reconcile with
+  the root span.
 
 Deliberately *not* lazy and deliberately dependency-free: the numpy-only
 shard server processes import this package, so it must stay importable
@@ -18,22 +24,26 @@ without jax, numpy, or anything outside the standard library.
 from .metrics import (
     BUCKETS_PER_OCTAVE,
     MetricsRegistry,
+    PhaseClock,
     bucket_index,
     bucket_value,
     labeled,
     merge_snapshots,
 )
-from .trace import TRACE_ENV, Span, enabled, span
+from .trace import TRACE_ENV, Span, current_context, enabled, scope, span
 
 __all__ = [
     "BUCKETS_PER_OCTAVE",
     "MetricsRegistry",
+    "PhaseClock",
     "Span",
     "TRACE_ENV",
     "bucket_index",
     "bucket_value",
+    "current_context",
     "enabled",
     "labeled",
     "merge_snapshots",
+    "scope",
     "span",
 ]

@@ -18,7 +18,14 @@ underflow bucket and report as 0.0.
 
 Label convention: a *labeled* metric name is rendered by :func:`labeled`
 as ``name{k=v,...}`` with keys sorted, so the same (name, labels) pair is
-always the same string and snapshots diff cleanly across runs.
+always the same string and snapshots diff cleanly across runs.  Labeled
+series are *capped per family* (the part before the ``{``): once a family
+holds ``max_labeled_series`` distinct label combinations, further new
+combinations are dropped and counted in ``obs.series_dropped{family=}``
+instead of growing the registry without bound (the ``{bucket=,packed=}``
+gauge families grow per observed shape, and a hostile or buggy label
+value — say a raw stream name — must not OOM a long-lived server).
+Unlabeled series and existing labeled series are never dropped.
 
 Snapshots are plain JSON-serializable dicts; :func:`merge_snapshots` folds
 many of them (the per-shard-server snapshots gathered over the wire by
@@ -35,7 +42,7 @@ from __future__ import annotations
 import math
 import threading
 import time
-from typing import Dict, Iterable, List, Optional
+from typing import Dict, Iterable, List, Optional, Tuple
 
 #: geometric histogram resolution: 4 buckets per factor of two
 BUCKETS_PER_OCTAVE = 4
@@ -159,26 +166,63 @@ class MetricsRegistry:
     docs/OBSERVABILITY.md), but not for per-byte loops.
     """
 
-    def __init__(self):
+    #: default per-family cap on distinct labeled series (far above the
+    #: widest legitimate family — ~40 length buckets x 2 packed states)
+    DEFAULT_MAX_LABELED_SERIES = 256
+
+    def __init__(self, max_labeled_series: int = DEFAULT_MAX_LABELED_SERIES):
         self._lock = threading.Lock()
         self._counters: Dict[str, float] = {}
         self._gauges: Dict[str, float] = {}
         self._hists: Dict[str, _Histogram] = {}
+        self._max_labeled_series = max_labeled_series
+        # per-kind family -> count of distinct labeled series admitted
+        self._families: Dict[str, Dict[str, int]] = {
+            "counter": {}, "gauge": {}, "hist": {},
+        }
+
+    def _admit(self, kind: str, store: dict, name: str) -> bool:
+        """Whether a write to ``name`` may proceed (caller holds the lock).
+
+        Existing series and unlabeled names (a fixed, code-enumerated set)
+        always pass; a *new* labeled series passes only while its family is
+        under the cap, else it is dropped and tallied in
+        ``obs.series_dropped{family=}`` (written directly to the counter
+        store — the overflow counter itself is exempt from the guard).
+        """
+        if name in store:
+            return True
+        brace = name.find("{")
+        if brace < 0:
+            return True
+        family = name[:brace]
+        fams = self._families[kind]
+        n = fams.get(family, 0)
+        if n >= self._max_labeled_series:
+            dropped = labeled("obs.series_dropped", family=family)
+            self._counters[dropped] = self._counters.get(dropped, 0) + 1
+            return False
+        fams[family] = n + 1
+        return True
 
     # -- mutators ---------------------------------------------------------------
     def inc(self, name: str, value: float = 1):
         """Add ``value`` (default 1) to a monotonic counter."""
         with self._lock:
-            self._counters[name] = self._counters.get(name, 0) + value
+            if self._admit("counter", self._counters, name):
+                self._counters[name] = self._counters.get(name, 0) + value
 
     def set_gauge(self, name: str, value: float):
         """Record the current value of a gauge (last write wins)."""
         with self._lock:
-            self._gauges[name] = value
+            if self._admit("gauge", self._gauges, name):
+                self._gauges[name] = value
 
     def observe(self, name: str, value: float):
         """Add one observation to a log-bucketed histogram."""
         with self._lock:
+            if not self._admit("hist", self._hists, name):
+                return
             h = self._hists.get(name)
             if h is None:
                 h = self._hists[name] = _Histogram()
@@ -215,6 +259,94 @@ class MetricsRegistry:
             self._counters.clear()
             self._gauges.clear()
             self._hists.clear()
+            for fams in self._families.values():
+                fams.clear()
+
+
+class _Phase:
+    """Context manager arm of :meth:`PhaseClock.phase`."""
+
+    __slots__ = ("_clock", "_name")
+
+    def __init__(self, clock: "PhaseClock", name: str):
+        self._clock = clock
+        self._name = name
+
+    def __enter__(self) -> "_Phase":
+        self._clock._push(self._name)
+        return self
+
+    def __exit__(self, *exc):
+        self._clock._pop()
+        return False
+
+
+class PhaseClock:
+    """Partition one request's wall time into named phases, exactly.
+
+    The clock starts at construction with an implicit bottom phase
+    (``"other"``); ``with clock.phase("fp"):`` accrues the enclosed wall
+    time to ``fp`` (phases nest — the inner phase owns the time while it
+    is open).  :meth:`move` reattributes seconds measured elsewhere (the
+    scheduler's host tail redo happens *inside* the dispatch call, so the
+    service moves its reported seconds from ``chunk-dispatch`` to
+    ``tail`` after the fact).  :meth:`stop` closes the clock and returns
+    ``(total, phases)`` where ``sum(phases.values()) == total`` *by
+    construction* — every elapsed instant belongs to exactly one phase —
+    which is what lets the ``req.latency_s{op=,phase=}`` histograms
+    reconcile against the request root span's wall time.
+
+    Single-threaded by design: one clock lives on one request's calling
+    thread (work done on writer threads is observed from the calling
+    thread as queue-wait/barrier phases, not by sharing the clock).
+    """
+
+    OTHER = "other"
+
+    def __init__(self):
+        self._t0 = time.perf_counter()
+        self._last = self._t0
+        self._stack: List[str] = [self.OTHER]
+        self._phases: Dict[str, float] = {}
+        self._total: Optional[float] = None
+
+    def _accrue(self):
+        now = time.perf_counter()
+        top = self._stack[-1]
+        self._phases[top] = self._phases.get(top, 0.0) + (now - self._last)
+        self._last = now
+
+    def _push(self, name: str):
+        self._accrue()
+        self._stack.append(name)
+
+    def _pop(self):
+        self._accrue()
+        self._stack.pop()
+
+    def phase(self, name: str) -> _Phase:
+        """Accrue the wall time of the ``with`` body to phase ``name``."""
+        return _Phase(self, name)
+
+    def move(self, src: str, dst: str, seconds: float):
+        """Reattribute up to ``seconds`` already accrued to ``src`` onto
+        ``dst`` (clamped so no phase goes negative and the sum is
+        preserved)."""
+        seconds = max(0.0, min(seconds, self._phases.get(src, 0.0)))
+        if seconds <= 0.0:
+            return
+        self._phases[src] -= seconds
+        self._phases[dst] = self._phases.get(dst, 0.0) + seconds
+
+    def stop(self) -> Tuple[float, Dict[str, float]]:
+        """Close the clock: returns ``(total_s, {phase: seconds})`` with
+        the phases summing to the total exactly.  Idempotent."""
+        if self._total is None:
+            while len(self._stack) > 1:  # abandoned phases (error paths)
+                self._pop()
+            self._accrue()
+            self._total = self._last - self._t0
+        return self._total, dict(self._phases)
 
 
 def merge_snapshots(snaps: Iterable[Optional[dict]]) -> dict:

@@ -21,19 +21,41 @@ as an estimator, the collision-resistant hash as ground truth.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import hashlib
 import os
+import threading
 import time
 from collections import Counter
 from typing import Dict, List, Optional
 
 from repro.core.params import SeqCDCParams, derived_params
 from repro.dedup import BlockStore, DirBlockStore, FingerprintIndex
-from repro.obs import MetricsRegistry, merge_snapshots, span
+from repro.obs import (
+    MetricsRegistry,
+    PhaseClock,
+    labeled,
+    merge_snapshots,
+    span,
+)
 
 from .objects import ObjectRecipe, RecipeTable
 from .scheduler import ChunkResult, ChunkScheduler
+
+#: the calling thread's active request (one per thread: requests on the
+#: public surface don't nest except put = submit+flush, which reuses the
+#: outer request so its phases attribute to op=put, not op=flush)
+_REQ_TLS = threading.local()
+
+
+@dataclasses.dataclass
+class _Request:
+    """One in-flight request: its id, op label, and phase partition clock."""
+
+    op: str
+    rid: str
+    clock: PhaseClock
 
 
 class IntegrityError(RuntimeError):
@@ -176,8 +198,9 @@ class ServiceBase:
         ``put`` returns, the object is durable (for file-backed stores)
         and restorable via ``get``.
         """
-        self.submit(name, data, overwrite=overwrite)
-        return self.flush()[-1]
+        with self._request("put", object=name):
+            self.submit(name, data, overwrite=overwrite)
+            return self.flush()[-1]
 
     def flush(self) -> List[ObjectStat]:
         raise NotImplementedError
@@ -191,6 +214,69 @@ class ServiceBase:
     def names(self) -> List[str]:
         """Sorted names of all committed objects (in-flight ones excluded)."""
         return self.recipes.names()
+
+    # -- request attribution ----------------------------------------------------
+    @contextlib.contextmanager
+    def _request(self, op: str, **attrs):
+        """Root of one public-surface request (put/get/delete/flush/gc).
+
+        Opens a ``request`` root span carrying a fresh request id (every
+        span under it — scheduler dispatches, writer tasks, shard RPCs,
+        server-side ops — shares its ``trace_id``) and a
+        :class:`~repro.obs.PhaseClock` whose partition lands in the
+        ``req.latency_s{op=,phase=}`` histograms at close, plus
+        ``req.total_s{op=}`` and a ``req.requests{op=}`` counter.  The
+        clock tiles the request's wall time exactly, so the per-phase sums
+        reconcile with the root span's ``wall_s``.
+
+        Re-entrant per thread: a request started while another is active
+        on the same thread joins it (``put`` = submit + ``flush``; the
+        phases attribute to the outer op).  Error paths still record — a
+        failed request's time is the tail latency you most want to see.
+        """
+        active = getattr(_REQ_TLS, "active", None)
+        if active is not None:
+            yield active
+            return
+        req = _Request(op=op, rid=os.urandom(6).hex(), clock=PhaseClock())
+        _REQ_TLS.active = req
+        try:
+            with span("request", op=op, req=req.rid, **attrs) as sp:
+                try:
+                    yield req
+                finally:
+                    # stop() is idempotent: the same partition recorded on
+                    # the root span here lands in the histograms below, so
+                    # a trace file alone carries the phase attribution
+                    _, phases = req.clock.stop()
+                    sp["phases"] = {p: round(s, 6)
+                                    for p, s in phases.items()}
+        finally:
+            _REQ_TLS.active = None
+            total, phases = req.clock.stop()
+            self.obs.inc(labeled("req.requests", op=op))
+            self.obs.observe(labeled("req.total_s", op=op), total)
+            for ph, secs in phases.items():
+                self.obs.observe(
+                    labeled("req.latency_s", op=op, phase=ph), secs
+                )
+
+    def _phase(self, name: str):
+        """Attribute the ``with`` body's wall time to phase ``name`` of the
+        thread's active request; a plain no-op outside any request, so
+        helpers shared by instrumented and bare call paths need no guard."""
+        active = getattr(_REQ_TLS, "active", None)
+        if active is None:
+            return contextlib.nullcontext()
+        return active.clock.phase(name)
+
+    def _move_phase(self, src: str, dst: str, seconds: float):
+        """Reattribute seconds between phases of the active request (the
+        scheduler's host tail redo runs *inside* the drain call, so its
+        self-reported seconds move chunk-dispatch -> tail after the fact)."""
+        active = getattr(_REQ_TLS, "active", None)
+        if active is not None:
+            active.clock.move(src, dst, seconds)
 
     # -- observability ----------------------------------------------------------
     def metrics(self) -> dict:
@@ -283,26 +369,36 @@ class DedupService(ServiceBase):
         # whatever drain() does — return results, or lose requests to a
         # device-side error — the submitted names are no longer pending, so
         # they must stop blocking resubmission
-        t0 = time.perf_counter()
-        with span("service.flush") as sp:
-            try:
-                results = self.scheduler.drain()
-            finally:
-                self._in_flight.clear()
-            out = []
-            stale: List[str] = []
-            for res in results:
-                stat, old_keys = self._commit(res)
-                out.append(stat)
-                stale.extend(old_keys)
-            self.sync()
-            if stale:
-                for k in stale:
-                    self.store.release(k)
-                self.sync()
-            sp["objects"] = len(out)
-        self.obs.observe("service.flush_s", time.perf_counter() - t0)
-        return out
+        with self._request("flush"):
+            t0 = time.perf_counter()
+            with span("service.flush") as sp:
+                tail0 = self.scheduler.stats.tail_s
+                with self._phase("chunk-dispatch"):
+                    try:
+                        results = self.scheduler.drain()
+                    finally:
+                        self._in_flight.clear()
+                # the host tail redo ran inside drain(); reattribute its
+                # self-reported seconds so tail latency is its own phase
+                self._move_phase("chunk-dispatch", "tail",
+                                 self.scheduler.stats.tail_s - tail0)
+                out = []
+                stale: List[str] = []
+                with self._phase("commit"):
+                    for res in results:
+                        stat, old_keys = self._commit(res)
+                        out.append(stat)
+                        stale.extend(old_keys)
+                with self._phase("sync"):
+                    self.sync()
+                if stale:
+                    for k in stale:
+                        self.store.release(k)
+                    with self._phase("sync"):
+                        self.sync()
+                sp["objects"] = len(out)
+            self.obs.observe("service.flush_s", time.perf_counter() - t0)
+            return out
 
     def _commit(self, res: ChunkResult) -> tuple[ObjectStat, List[str]]:
         """Store one result; returns (stat, keys superseded by an overwrite).
@@ -332,7 +428,8 @@ class DedupService(ServiceBase):
             fps=pack_fps(res.fps) if res.fps.shape[0] == len(keys) else None,
         )
         if res.fps.size:
-            self.fp_index.add_batch(res.fps, res.lengths)
+            with self._phase("fp"):
+                self.fp_index.add_batch(res.fps, res.lengths)
         self.recipes.add(recipe)
         return ObjectStat.of(recipe), (old.keys if old is not None else [])
 
@@ -346,13 +443,19 @@ class DedupService(ServiceBase):
         than returning wrong bytes.  ``KeyError`` for unknown names.
         """
         r = self.recipes.get(name)
-        t0 = time.perf_counter()
-        with span("service.get", object=name, bytes=r.size):
-            data = verify_restore(r, self.store.get_stream(r.keys))
-        self.obs.observe("service.get_s", time.perf_counter() - t0)
-        self.obs.inc("restore.objects")
-        self.obs.inc("restore.bytes", r.size)
-        return data
+        with self._request("get", object=name):
+            t0 = time.perf_counter()
+            with span("service.get", object=name, bytes=r.size):
+                # "rpc" = the block-gather seam; for this single-store
+                # service it is the same seam served in-process
+                with self._phase("rpc"):
+                    data = self.store.get_stream(r.keys)
+                with self._phase("verify"):
+                    data = verify_restore(r, data)
+            self.obs.observe("service.get_s", time.perf_counter() - t0)
+            self.obs.inc("restore.objects")
+            self.obs.inc("restore.bytes", r.size)
+            return data
 
     # -- delete / GC ------------------------------------------------------------
     def delete(self, name: str) -> int:
@@ -362,14 +465,18 @@ class DedupService(ServiceBase):
         unlinked: a crash mid-delete leaves orphan blocks for :meth:`gc`,
         never a surviving recipe pointing at missing blocks.
         """
-        r = self.recipes.remove(name)  # KeyError for unknown objects
-        self.recipes.sync()
-        freed = 0
-        for k, ln in zip(r.keys, r.chunk_lens):
-            if self.store.release(k):
-                freed += ln
-        self.sync()
-        return freed
+        with self._request("delete", object=name):
+            r = self.recipes.remove(name)  # KeyError for unknown objects
+            with self._phase("sync"):
+                self.recipes.sync()
+            freed = 0
+            with self._phase("commit"):
+                for k, ln in zip(r.keys, r.chunk_lens):
+                    if self.store.release(k):
+                        freed += ln
+            with self._phase("sync"):
+                self.sync()
+            return freed
 
     def gc(self) -> GCStats:
         """Mark-and-sweep: recipes are roots; everything else is garbage.

@@ -297,6 +297,7 @@ class SchedulerStats:
     device_bytes: int = 0  # bytes shipped to the device (incl. padding)
     stream_bytes: int = 0  # real payload bytes
     tail_bytes: int = 0  # bytes re-chunked host-side (exactness fixup)
+    tail_s: float = 0.0  # wall seconds the host tail redo cost (inside drain)
     packed_streams: int = 0  # streams that rode a shared packed row
 
     @property
@@ -821,10 +822,16 @@ class ChunkScheduler:
     def _exactify(self, req: ChunkRequest, padded: np.ndarray,
                   padded_fps: np.ndarray | None) -> ChunkResult:
         """Trim a padded-run boundary list to the exact per-stream result."""
+        t0 = time.perf_counter()
         bounds, fps, lengths, tail_bytes = _trim_exact(
             req.data, padded, padded_fps, self.params
         )
         if tail_bytes:
+            # tail_s counts only redos that did work: the kept-boundary
+            # trim is O(chunks) bookkeeping, the oracle re-chunk is the
+            # latency phase (the service reattributes it out of its
+            # chunk-dispatch phase via this accumulator's delta)
             self.stats.tail_bytes += tail_bytes
+            self.stats.tail_s += time.perf_counter() - t0
             self.obs.inc("sched.tail_bytes", tail_bytes)
         return ChunkResult(req.tag, req.data, bounds, fps, lengths)

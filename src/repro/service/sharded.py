@@ -265,17 +265,24 @@ class ShardedDedupService(ServiceBase):
         # whatever drain() does — return results, or lose requests to a
         # device-side error — the submitted names are no longer pending, so
         # they must stop blocking resubmission
-        t0 = time.perf_counter()
-        with span("service.flush") as sp:
-            out = self._flush(sp)
-        self.obs.observe("service.flush_s", time.perf_counter() - t0)
-        return out
+        with self._request("flush"):
+            t0 = time.perf_counter()
+            with span("service.flush") as sp:
+                out = self._flush(sp)
+            self.obs.observe("service.flush_s", time.perf_counter() - t0)
+            return out
 
     def _flush(self, sp) -> List[ObjectStat]:
-        try:
-            results = self.scheduler.drain()
-        finally:
-            self._in_flight.clear()
+        tail0 = self.scheduler.stats.tail_s
+        with self._phase("chunk-dispatch"):
+            try:
+                results = self.scheduler.drain()
+            finally:
+                self._in_flight.clear()
+        # the host tail redo ran inside drain(); reattribute its
+        # self-reported seconds so tail latency is its own phase
+        self._move_phase("chunk-dispatch", "tail",
+                         self.scheduler.stats.tail_s - tail0)
         staged = []  # (result, owners, keys)
         # coalesce each shard's puts: the writer seam accepts batches
         # (``put_blocks``), so a flush submits one task per shard —
@@ -284,56 +291,67 @@ class ShardedDedupService(ServiceBase):
         # arbitrarily large flush cannot buffer unbounded chunk bytes
         # in a single frame
         batches: dict[int, list] = {}  # shard -> [(keys, i, chunk view)]
-        for res in results:
-            owners = self._owners_for(res)
-            keys: List[Optional[str]] = [None] * len(owners)
-            s = 0
-            for i, e in enumerate(res.bounds.tolist()):
-                batches.setdefault(int(owners[i]), []).append(
-                    (keys, i, res.data[s:e])
-                )
-                s = e
-            staged.append((res, owners, keys))
-        for shard, items in batches.items():
-            for group in self._split_batches(items):
-                self.writers.submit(
-                    shard, self._put_blocks_task(shard, group),
-                    nbytes=sum(c.size for _, _, c in group),
-                )
-        self.writers.barrier()  # blocks are durable past this point
+        with self._phase("routing"):
+            for res in results:
+                owners = self._owners_for(res)
+                keys: List[Optional[str]] = [None] * len(owners)
+                s = 0
+                for i, e in enumerate(res.bounds.tolist()):
+                    batches.setdefault(int(owners[i]), []).append(
+                        (keys, i, res.data[s:e])
+                    )
+                    s = e
+                staged.append((res, owners, keys))
+        # writer-queue-wait = submit backpressure + the barrier: the time
+        # this request spent waiting on writer queues (which is where the
+        # store writes and shard RPCs happen) before its blocks were durable
+        with self._phase("writer-queue-wait"):
+            for shard, items in batches.items():
+                for group in self._split_batches(items):
+                    self.writers.submit(
+                        shard, self._put_blocks_task(shard, group),
+                        nbytes=sum(c.size for _, _, c in group),
+                    )
+            self.writers.barrier()  # blocks are durable past this point
 
         out = []
         stale: List[tuple[int, str]] = []
-        for res, owners, keys in staged:
-            name = str(res.tag)
-            old = self.recipes.get(name) if name in self.recipes else None
-            recipe = ObjectRecipe(
-                name=name,
-                size=res.size,
-                sha256=hashlib.sha256(res.data).hexdigest(),
-                keys=list(keys),  # type: ignore[arg-type]
-                chunk_lens=res.lengths.astype(int).tolist(),
-                shards=[int(o) for o in owners],
-                fps=pack_fps(res.fps),  # fps are mandatory here: reshardable
-            )
-            self.recipes.add(recipe)
-            out.append(ObjectStat.of(recipe))
-            self.obs.inc("ingest.objects")
-            self.obs.inc("ingest.bytes", res.size)
-            self.obs.inc("ingest.chunks", len(keys))
-            if old is not None:
-                stale.extend(zip(self._recipe_shards(old), old.keys))
+        with self._phase("commit"):
+            for res, owners, keys in staged:
+                name = str(res.tag)
+                old = self.recipes.get(name) if name in self.recipes else None
+                recipe = ObjectRecipe(
+                    name=name,
+                    size=res.size,
+                    sha256=hashlib.sha256(res.data).hexdigest(),
+                    keys=list(keys),  # type: ignore[arg-type]
+                    chunk_lens=res.lengths.astype(int).tolist(),
+                    shards=[int(o) for o in owners],
+                    fps=pack_fps(res.fps),  # fps mandatory here: reshardable
+                )
+                self.recipes.add(recipe)
+                out.append(ObjectStat.of(recipe))
+                self.obs.inc("ingest.objects")
+                self.obs.inc("ingest.bytes", res.size)
+                self.obs.inc("ingest.chunks", len(keys))
+                if old is not None:
+                    stale.extend(zip(self._recipe_shards(old), old.keys))
         sp["objects"] = len(out)
-        self._ingest_fps(results)
-        self.sync()
+        with self._phase("fp"):
+            self._ingest_fps(results)
+        with self._phase("sync"):
+            self.sync()
         if stale:
             by_shard: dict[int, List[str]] = {}
             for shard, key in stale:
                 by_shard.setdefault(shard, []).append(key)
-            for shard, keys in by_shard.items():
-                self.writers.submit(shard, self._release_task(shard, keys))
-            self.writers.barrier()
-            self.sync()
+            with self._phase("writer-queue-wait"):
+                for shard, keys in by_shard.items():
+                    self.writers.submit(shard,
+                                        self._release_task(shard, keys))
+                self.writers.barrier()
+            with self._phase("sync"):
+                self.sync()
         return out
 
     #: max chunk payload per coalesced ``put_blocks`` call: a typical flush
@@ -458,24 +476,33 @@ class ShardedDedupService(ServiceBase):
         of one per chunk — then spliced back into stream order.
         """
         r = self.recipes.get(name)
-        t0 = time.perf_counter()
-        with span("service.get", object=name, bytes=r.size):
-            owners = self._recipe_shards(r)
-            by_shard: dict[int, List[int]] = {}
-            for i, shard in enumerate(owners):
-                by_shard.setdefault(shard, []).append(i)
-            parts: List[Optional[bytes]] = [None] * len(r.keys)
-            for shard, idxs in by_shard.items():
-                blocks = self.stores[shard].get_blocks(
-                    [r.keys[i] for i in idxs]
-                )
-                for i, b in zip(idxs, blocks):
-                    parts[i] = b
-            data = verify_restore(r, b"".join(parts))  # type: ignore[arg-type]
-        self.obs.observe("service.get_s", time.perf_counter() - t0)
-        self.obs.inc("restore.objects")
-        self.obs.inc("restore.bytes", r.size)
-        return data
+        with self._request("get", object=name):
+            t0 = time.perf_counter()
+            with span("service.get", object=name, bytes=r.size):
+                with self._phase("routing"):
+                    owners = self._recipe_shards(r)
+                    by_shard: dict[int, List[int]] = {}
+                    for i, shard in enumerate(owners):
+                        by_shard.setdefault(shard, []).append(i)
+                # "rpc" = the per-shard block gather (one get_blocks call
+                # per owner shard; a real RPC on the remote transport, the
+                # same seam served in-process on the local one)
+                parts: List[Optional[bytes]] = [None] * len(r.keys)
+                with self._phase("rpc"):
+                    for shard, idxs in by_shard.items():
+                        blocks = self.stores[shard].get_blocks(
+                            [r.keys[i] for i in idxs]
+                        )
+                        for i, b in zip(idxs, blocks):
+                            parts[i] = b
+                with self._phase("verify"):
+                    data = verify_restore(
+                        r, b"".join(parts)  # type: ignore[arg-type]
+                    )
+            self.obs.observe("service.get_s", time.perf_counter() - t0)
+            self.obs.inc("restore.objects")
+            self.obs.inc("restore.bytes", r.size)
+            return data
 
     # -- delete / GC ------------------------------------------------------------
     def delete(self, name: str) -> int:
@@ -486,17 +513,23 @@ class ShardedDedupService(ServiceBase):
         (keeping every store single-writer), so a crash mid-delete leaves
         reclaimable orphans, never a recipe naming missing blocks.
         """
-        r = self.recipes.remove(name)  # KeyError for unknown objects
-        self.recipes.sync()
-        freed = [0] * self.num_shards
-        by_shard: dict[int, List[tuple[str, int]]] = {}
-        for shard, key, ln in zip(self._recipe_shards(r), r.keys, r.chunk_lens):
-            by_shard.setdefault(shard, []).append((key, ln))
-        for shard, pairs in by_shard.items():
-            self.writers.submit(shard, self._free_task(shard, pairs, freed))
-        self.writers.barrier()
-        self.sync()
-        return sum(freed)
+        with self._request("delete", object=name):
+            r = self.recipes.remove(name)  # KeyError for unknown objects
+            with self._phase("sync"):
+                self.recipes.sync()
+            freed = [0] * self.num_shards
+            by_shard: dict[int, List[tuple[str, int]]] = {}
+            for shard, key, ln in zip(self._recipe_shards(r), r.keys,
+                                      r.chunk_lens):
+                by_shard.setdefault(shard, []).append((key, ln))
+            with self._phase("writer-queue-wait"):
+                for shard, pairs in by_shard.items():
+                    self.writers.submit(shard,
+                                        self._free_task(shard, pairs, freed))
+                self.writers.barrier()
+            with self._phase("sync"):
+                self.sync()
+            return sum(freed)
 
     def _free_task(self, shard: int, pairs: List[tuple[str, int]],
                    freed: List[int]):

@@ -45,7 +45,7 @@ import threading
 import time
 from typing import Dict, List, Optional, Tuple
 
-from repro.obs import MetricsRegistry, labeled
+from repro.obs import MetricsRegistry, current_context, labeled, span
 
 from . import protocol as P
 from .protocol import ShardTransportError
@@ -81,28 +81,37 @@ class RemoteShardClient:
             reg.inc(labeled("rpc.client.calls", op=opname))
             reg.inc(labeled("rpc.client.send_bytes", op=opname), len(blob))
         t0 = time.perf_counter()
-        with self._lock:
-            if self._dead is not None:
-                raise ShardTransportError(
-                    f"shard server {self.host}:{self.port} is down "
-                    f"({self._dead})"
-                )
-            try:
-                if unbounded:
-                    self._sock.settimeout(None)
-                P.send_frame(self._sock, op, meta, blob)
-                rop, rmeta, rblob = P.recv_frame(self._sock)
-            except (OSError, P.ProtocolError) as e:
-                self._mark_dead(e)
-                if reg is not None:
-                    reg.inc(labeled("rpc.client.errors", op=opname))
-                raise ShardTransportError(
-                    f"shard server {self.host}:{self.port} unreachable "
-                    f"during {P.OP_NAMES.get(op, op)}: {e}"
-                ) from e
-            finally:
-                if unbounded and self._dead is None:
-                    self._sock.settimeout(self._timeout)
+        with span("rpc.client", op=opname,
+                  peer=f"{self.host}:{self.port}", send_bytes=len(blob)):
+            # protocol v3: ship this span's context in frame meta so the
+            # server's rpc.server span becomes our child (copy, never
+            # mutate the caller's dict); absent entirely when tracing is
+            # off, so the off path stays byte-identical on the wire
+            tctx = current_context()
+            if tctx is not None:
+                meta = {**(meta or {}), "trace": tctx}
+            with self._lock:
+                if self._dead is not None:
+                    raise ShardTransportError(
+                        f"shard server {self.host}:{self.port} is down "
+                        f"({self._dead})"
+                    )
+                try:
+                    if unbounded:
+                        self._sock.settimeout(None)
+                    P.send_frame(self._sock, op, meta, blob)
+                    rop, rmeta, rblob = P.recv_frame(self._sock)
+                except (OSError, P.ProtocolError) as e:
+                    self._mark_dead(e)
+                    if reg is not None:
+                        reg.inc(labeled("rpc.client.errors", op=opname))
+                    raise ShardTransportError(
+                        f"shard server {self.host}:{self.port} unreachable "
+                        f"during {P.OP_NAMES.get(op, op)}: {e}"
+                    ) from e
+                finally:
+                    if unbounded and self._dead is None:
+                        self._sock.settimeout(self._timeout)
         if reg is not None:
             # latency includes lock wait: that's the caller-observed RPC
             # cost when the writer and ingest threads contend for the

@@ -30,6 +30,17 @@ returns the server's live :class:`~repro.obs.MetricsRegistry` snapshot so
 (docs/OBSERVABILITY.md).  Adding ``metrics`` bumped ``VERSION`` to 2: a
 v1 peer fails loudly at the first frame instead of choking on an op it
 does not know.
+
+``VERSION`` 3 adds distributed-trace propagation: a request frame's meta
+MAY carry a ``trace`` entry — ``{"trace_id": hex, "span_id": hex}``, the
+client's active span context — which the server pops before op dispatch
+and adopts as the parent of its per-op ``rpc.server`` span
+(``repro.obs.trace.scope``), stitching client and server JSONL spans into
+one causal tree.  The entry is optional (absent when tracing is off), is
+never interpreted by op handlers, and changes no op semantics; the bump
+exists because frame meta gained a reserved key that a v2 server would
+silently pass into handler kwargs, and mixed deployments must fail at the
+first frame, not on a surprise argument.
 """
 from __future__ import annotations
 
@@ -39,7 +50,7 @@ import struct
 from typing import Optional, Tuple
 
 MAGIC = b"SCDC"
-VERSION = 2  # v2: added OP_METRICS (live per-shard telemetry snapshots)
+VERSION = 3  # v3: optional "trace" meta entry (causal span propagation)
 
 #: header: magic, version, op, reserved, meta_len (u32), blob_len (u64)
 HEADER = struct.Struct("!4sBBHIQ")

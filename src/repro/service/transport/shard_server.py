@@ -58,7 +58,7 @@ import time
 import traceback
 
 from repro.dedup.store import DirBlockStore
-from repro.obs import MetricsRegistry, labeled, span
+from repro.obs import MetricsRegistry, labeled, scope, span
 from repro.service.objects import ObjectRecipe, RecipeTable
 
 from . import protocol as P
@@ -78,6 +78,11 @@ class _Handler(socketserver.BaseRequestHandler):
                 self._send_error(sock, e)
                 return  # stream offset untrusted past a framing error
             opname = P.OP_NAMES.get(op, str(op))
+            # v3 trace propagation: the client's span context rides in the
+            # reserved "trace" meta entry; pop it *before* dispatch (op
+            # handlers never see it) and adopt it as the parent of this
+            # frame's rpc.server span — absent/None is a clean no-op
+            tctx = meta.pop("trace", None) if isinstance(meta, dict) else None
             # the server-side mirror of the client's rpc.client.* metrics:
             # every received frame is counted and blob-byte-accounted (the
             # two ends agree exactly — payload blob bytes, headers/meta
@@ -97,7 +102,8 @@ class _Handler(socketserver.BaseRequestHandler):
                 return
             try:
                 t0 = time.perf_counter()
-                with span("rpc.server", op=opname, recv_bytes=len(blob)):
+                with scope(tctx), \
+                        span("rpc.server", op=opname, recv_bytes=len(blob)):
                     with shard.lock:
                         rmeta, rblob = shard.dispatch(op, meta, blob)
                 shard.registry.observe(

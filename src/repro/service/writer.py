@@ -25,11 +25,19 @@ path has.
 
 Every writer reports into a :class:`~repro.obs.MetricsRegistry`
 (docs/OBSERVABILITY.md): queue depth gauge, backpressure stall-time
-counter (seconds ``submit`` spent blocked on a full queue), per-task flush
-latency histogram, flushed-byte and error counters — all labeled by shard.
-Metrics outlive a failed flush: the error is consumed at the barrier but
-the counters keep counting, so backpressure and failure rates stay
-observable across retries.
+counter (seconds ``submit`` spent blocked on a full queue), per-task
+queue-wait and flush latency histograms, flushed-byte and error counters —
+all labeled by shard.  Metrics outlive a failed flush: the error is
+consumed at the barrier but the counters keep counting, so backpressure
+and failure rates stay observable across retries.
+
+Tracing crosses the queue: ``submit`` captures the enqueuing thread's
+span context (:func:`~repro.obs.current_context`) alongside the task, and
+the worker adopts it (:func:`~repro.obs.scope`) around the ``writer.task``
+span — so a task's spans (including the shard RPCs it makes) are children
+of the *request that enqueued it*, and the recorded queue wait is charged
+to the request that paid it, not smeared across whoever happened to be
+flushing.
 """
 from __future__ import annotations
 
@@ -38,7 +46,7 @@ import threading
 import time
 from typing import Callable, List, Optional
 
-from repro.obs import MetricsRegistry, labeled, span
+from repro.obs import MetricsRegistry, current_context, labeled, scope, span
 
 _STOP = object()
 
@@ -66,6 +74,7 @@ class ShardWriter:
         self._m_stall = labeled("writer.stall_s", shard=shard)
         self._m_tasks = labeled("writer.tasks", shard=shard)
         self._m_task_s = labeled("writer.task_s", shard=shard)
+        self._m_wait_s = labeled("writer.queue_wait_s", shard=shard)
         self._m_bytes = labeled("writer.flushed_bytes", shard=shard)
         self._m_errors = labeled("writer.task_errors", shard=shard)
         if not self.async_mode:
@@ -74,13 +83,27 @@ class ShardWriter:
         self._thread = threading.Thread(target=self._loop, name=name, daemon=True)
         self._thread.start()
 
-    def _run_task(self, fn: Callable[[], None], nbytes: int):
+    def _run_task(self, fn: Callable[[], None], nbytes: int,
+                  ctx: Optional[dict] = None,
+                  t_enq: Optional[float] = None):
         """Execute one task with timing/accounting; captures the first
-        error (re-raised at the barrier) and counts every failure."""
+        error (re-raised at the barrier) and counts every failure.
+
+        ``ctx``/``t_enq`` arrive from the queue in async mode: the
+        enqueuer's span context (adopted so the task traces as a child of
+        the request that submitted it) and the enqueue timestamp (the
+        delta to now is the queue wait that request paid).  The sync path
+        passes neither — the task runs on the submitting thread where the
+        context is already live and there is no queue to wait in.
+        """
         t0 = time.perf_counter()
+        if t_enq is not None:
+            self.obs.observe(self._m_wait_s, t0 - t_enq)
         try:
             if self._err is None:  # fail fast: drop work after an error
-                with span("writer.task", bytes=nbytes):
+                with scope(ctx), span("writer.task", bytes=nbytes) as sp:
+                    if t_enq is not None:
+                        sp["queue_wait_s"] = t0 - t_enq
                     fn()
                 self.obs.inc(self._m_bytes, nbytes)
         except BaseException as e:  # noqa: BLE001 — re-raised at barrier
@@ -110,15 +133,18 @@ class ShardWriter:
         if not self.async_mode:
             self._run_task(fn, nbytes)
             return
+        # the task carries its enqueuer's span context (the worker adopts
+        # it) and the enqueue time (worker-side delta = queue wait)
+        task = (fn, nbytes, current_context(), time.perf_counter())
         if self._q.full():
             # backpressure stall: the producer is now blocked until the
             # worker frees a slot — that wait is the metric, not the
             # uncontended enqueue cost (which is sub-microsecond)
             t0 = time.perf_counter()
-            self._q.put((fn, nbytes))
+            self._q.put(task)
             self.obs.inc(self._m_stall, time.perf_counter() - t0)
         else:
-            self._q.put((fn, nbytes))
+            self._q.put(task)
         self.obs.set_gauge(self._m_depth, self._q.qsize())
 
     def barrier(self):

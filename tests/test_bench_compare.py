@@ -1,0 +1,126 @@
+"""The perf-regression gate: scripts/bench_compare.py.
+
+Doctored-report tests: each tolerance class must fail on an injected
+regression of its own kind and pass within its band; row-coverage loss
+fails; new rows pass.  The committed BENCH_quick.json must self-compare
+clean (that is the invariant CI relies on).
+"""
+import json
+import os
+import sys
+
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "scripts"))
+
+import bench_compare as bc  # noqa: E402
+
+REPO = os.path.join(os.path.dirname(__file__), "..")
+
+
+def report(rows, failed_modules=()):
+    return {"meta": {"budget": "quick",
+                     "failed_modules": list(failed_modules)},
+            "results": rows}
+
+
+def row(**over):
+    base = {"bench": "svc", "budget": "quick", "shards": 2,
+            "transport": "local", "ingest_gbps": 1.0, "occupancy": 0.9,
+            "dedup_ratio": 1.5}
+    base.update(over)
+    return base
+
+
+class TestCompare:
+    def test_identical_reports_pass(self):
+        rows, failures = bc.compare(report([row()]), report([row()]))
+        assert failures == []
+        assert all(r["ok"] for r in rows)
+        # every watched metric present in the row was compared
+        assert {r["metric"] for r in rows} == {
+            "ingest_gbps", "occupancy", "dedup_ratio"}
+
+    def test_throughput_collapse_fails_but_noise_passes(self):
+        base = report([row()])
+        # a 2x slowdown is machine noise at quick budget: inside the band
+        _, failures = bc.compare(base, report([row(ingest_gbps=0.5)]))
+        assert failures == []
+        # a 10x collapse (kernel fell back to scalar) is a regression
+        _, failures = bc.compare(base, report([row(ingest_gbps=0.1)]))
+        assert len(failures) == 1 and "ingest_gbps" in failures[0]
+
+    def test_occupancy_band_is_absolute_and_tight(self):
+        base = report([row()])
+        _, failures = bc.compare(base, report([row(occupancy=0.85)]))
+        assert failures == []  # -0.05 abs: within the 0.1 band
+        _, failures = bc.compare(base, report([row(occupancy=0.7)]))
+        assert len(failures) == 1 and "occupancy" in failures[0]
+
+    def test_dedup_ratio_band_is_relative_and_tight(self):
+        base = report([row()])
+        _, failures = bc.compare(base, report([row(dedup_ratio=1.495)]))
+        assert failures == []  # -0.3% rel: inside the 1% band
+        _, failures = bc.compare(base, report([row(dedup_ratio=1.4)]))
+        assert len(failures) == 1 and "dedup_ratio" in failures[0]
+
+    def test_missing_baseline_row_fails_coverage(self):
+        # a benchmark that silently stopped running is a regression too
+        base = report([row(), row(shards=4)])
+        _, failures = bc.compare(base, report([row()]))
+        assert len(failures) == 1 and "missing" in failures[0]
+
+    def test_new_fresh_row_passes(self):
+        rows, failures = bc.compare(
+            report([row()]), report([row(), row(shards=8)])
+        )
+        assert failures == []
+        assert any(r["metric"] == "(new row)" for r in rows)
+
+    def test_failed_modules_fail_the_gate(self):
+        _, failures = bc.compare(
+            report([row()]),
+            report([row()], failed_modules=["bench_service"]),
+        )
+        assert len(failures) == 1 and "failed modules" in failures[0]
+
+    def test_identity_includes_config_axes(self):
+        # same bench title, different transport: distinct rows, no match
+        base = report([row(transport="local")])
+        _, failures = bc.compare(base, report([row(transport="remote")]))
+        assert any("missing" in f for f in failures)
+
+    def test_custom_tolerances(self):
+        tol = bc.Tolerances(throughput_ratio=0.9)
+        _, failures = bc.compare(report([row()]),
+                                 report([row(ingest_gbps=0.5)]), tol)
+        assert len(failures) == 1  # the same 2x drop now out of band
+
+
+class TestCLI:
+    def test_committed_baseline_self_compares_clean(self, capsys):
+        path = os.path.join(REPO, "BENCH_quick.json")
+        assert bc.main([path, path]) == 0
+        out = capsys.readouterr().out
+        assert "within tolerance bands" in out
+
+    def test_doctored_report_fails_cli(self, tmp_path, capsys):
+        path = os.path.join(REPO, "BENCH_quick.json")
+        doc = json.load(open(path))
+        doctored = 0
+        for r in doc["results"]:
+            if "dedup_ratio" in r:
+                r["dedup_ratio"] *= 0.5
+                doctored += 1
+        assert doctored  # the committed report does carry the metric
+        bad = tmp_path / "doctored.json"
+        bad.write_text(json.dumps(doc))
+        assert bc.main([path, str(bad)]) == 1
+        assert "REGRESSION dedup_ratio" in capsys.readouterr().err
+
+    def test_unusable_input_exits_2(self, tmp_path):
+        junk = tmp_path / "junk.json"
+        junk.write_text("{not json")
+        with pytest.raises(SystemExit) as ei:
+            bc.main([str(junk), str(junk)])
+        assert ei.value.code == 2
