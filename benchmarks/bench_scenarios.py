@@ -1,0 +1,126 @@
+"""Scenario engine benchmark: dedup-ratio-vs-throughput per workload.
+
+Runs the full service — batched ingest, exact SHA-accounted dedup,
+SHA-verified restore — over every catalog scenario
+(``repro.scenarios``: dataset revisions, backup snapshots, LM text,
+container images) and emits one row per scenario with both sides of the
+trade the CDC survey (arxiv 2409.06066) plots: the dedup ratio the
+workload's structure allows and the throughput the pipeline delivers on
+it.  The ``scenario`` field is a bench-compare identity axis
+(scripts/bench_compare.py), so a per-scenario ratio regression fails CI
+exactly like a speed regression.
+
+Determinism contract: the corpora are seeded (same seed -> identical
+bytes, cross-process) and the chunking is bit-deterministic, so
+``dedup_ratio``/``chunks``/``objects`` are exact per seed — only the
+``*_gbps`` columns are machine-dependent.  Each row also carries the
+generator's expected-structure descriptor (``dup_fraction`` and the
+contract band); a ratio outside the band fails the module, which fails
+``benchmarks/run.py`` and therefore the gate.
+"""
+from __future__ import annotations
+
+import time
+
+from repro.scenarios import SCENARIOS, bench_params, generate
+from repro.service import DedupService
+
+from . import common
+
+# pinned: scenario rows must not drift with REPRO_* env defaults
+MASK_IMPL = "jnp"
+STEP_IMPL = "wide"
+FP_IMPL = "reference"
+PIPELINE_IMPL = "split"
+PACKING_IMPL = "off"
+
+
+def run(budget: str = "small") -> list:
+    budget = "quick" if budget == "quick" else ("full" if budget == "full"
+                                                else "small")
+    rows = []
+    band_failures = []
+    for name in SCENARIOS:
+        corpus = generate(name, budget)
+        total = corpus.logical_bytes
+        # warmup pass compiles the per-bucket programs, then a timed cold
+        # store (the bench_service idiom): quick-budget corpora are small
+        # enough that jit compile would otherwise dominate ingest_s
+        for _ in range(2):
+            svc = DedupService(
+                params=bench_params(name, budget), slots=8,
+                mask_impl=MASK_IMPL, step_impl=STEP_IMPL, fp_impl=FP_IMPL,
+                pipeline_impl=PIPELINE_IMPL, packing_impl=PACKING_IMPL,
+            )
+            t0 = time.perf_counter()
+            for obj_name, data in corpus.objects:
+                svc.submit(obj_name, data)
+            svc.flush()
+            ingest_s = time.perf_counter() - t0
+
+        # restore is idempotent, so best-of-N timing keeps the quick-budget
+        # rows (a few MiB, single-pass ~ms) out of wall-clock-noise land
+        def restore():
+            for obj_name, _ in corpus.objects:
+                svc.get(obj_name)  # SHA-256 verified restore
+
+        restore_gbps = common.time_throughput(restore, total)["gbps"]
+
+        st = svc.stats()
+        exp = corpus.expected
+        if not exp.check_ratio(st.dedup_ratio):
+            band_failures.append(
+                f"{name}: dedup_ratio {st.dedup_ratio:.3f} outside contract "
+                f"band [{exp.min_dedup_ratio}, {exp.max_dedup_ratio}]")
+        rows.append({
+            "budget": budget,
+            "scenario": name,
+            "seed": corpus.seed,
+            "avg_chunk": svc.params.avg_size,
+            "shards": 1,
+            "mask_impl": MASK_IMPL,
+            "step_impl": STEP_IMPL,
+            "fp_impl": FP_IMPL,
+            "pipeline_impl": PIPELINE_IMPL,
+            "packing_impl": PACKING_IMPL,
+            "fingerprints": 1,
+            "objects": len(corpus.objects),
+            "corpus_mb": total / common.MiB,
+            "ingest_gbps": total / ingest_s / 1e9,
+            "restore_gbps": restore_gbps,
+            "dedup_ratio": st.dedup_ratio,
+            "space_savings": st.space_savings,
+            "dup_fraction": exp.duplicate_fraction,
+            "band_lo": exp.min_dedup_ratio,
+            "band_hi": exp.max_dedup_ratio,
+            "chunks": st.total_chunks,
+            "unique_chunks": st.unique_chunks,
+        })
+        common.emit_metrics(f"scenario_{name}", svc.metrics())
+    common.emit(rows, "scenarios: versioned-corpus dedup ratio vs throughput")
+    if band_failures:
+        raise AssertionError(
+            "scenario dedup-ratio contract violated: "
+            + "; ".join(band_failures))
+    return rows
+
+
+def main(argv=None) -> int:
+    import argparse
+    import json
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--json", default=None, metavar="PATH")
+    args = ap.parse_args(argv)
+    budget = "full" if args.full else ("quick" if args.quick else "small")
+    rows = run(budget)
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(rows, f, indent=1)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -83,6 +83,7 @@ MODULES = [
     "bench_service",          # streaming dedup service (docs/SERVICE.md)
     "bench_sharded_service",  # sharded service (docs/SHARDING.md)
     "bench_scheduler_occupancy",  # adversarial length mixes (docs/SERVICE.md)
+    "bench_scenarios",        # versioned-corpus workloads (docs/SCENARIOS.md)
 ]
 
 #: the --quick subset: minutes-fast modules that understand the tiny
@@ -96,12 +97,15 @@ QUICK_MODULES = [
     "bench_sharded_service",
     "bench_scheduler_occupancy",
     "bench_intrinsics",
+    "bench_scenarios",
 ]
 
-#: configuration every benchmark uses unless its rows say otherwise
+#: configuration every benchmark uses unless its rows say otherwise;
+#: "scenario" tags rows from the workload catalog (repro.scenarios) —
+#: synthetic-corpus benchmarks use the "none" default
 DEFAULTS = {"mask_impl": "jnp", "step_impl": "wide", "fp_impl": "reference",
             "pipeline_impl": "split", "packing_impl": "off", "shards": 1,
-            "transport": "local"}
+            "transport": "local", "scenario": "none"}
 
 
 def main() -> None:

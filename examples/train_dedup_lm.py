@@ -2,17 +2,25 @@
 checkpoints -> restart, all through the public API.
 
   PYTHONPATH=src python examples/train_dedup_lm.py
+  PYTHONPATH=src python examples/train_dedup_lm.py --steps 6 --corpus-mb 1 \\
+      --ckpt-every 2 --crash-at 4        # reduced smoke (tests/test_examples.py)
 
-Trains a ~1M-param llama-family model for a few hundred steps on a
-deduplicated byte corpus, checkpoints through the CDC store, then simulates
-a node failure and proves the restart is bit-deterministic.
+Trains a ~1M-param llama-family model on an LM-text corpus with controlled
+near-duplication from the scenario engine (``repro.scenarios``), dedups it
+with the paper's chunker before tokenization, checkpoints through the CDC
+store, then simulates a node failure at ``--crash-at`` and proves the
+restart resumes exactly there.  ``--crash-at`` must be a multiple of
+``--ckpt-every`` (the crash lands on a step with a checkpoint, like the
+original 200/100 schedule).
 """
+import argparse
 import os
 import shutil
 import sys
 import tempfile
 
-sys.path.insert(0, "src")
+sys.path.insert(
+    0, os.path.join(os.path.dirname(os.path.abspath(__file__)), "..", "src"))
 
 import jax
 import numpy as np
@@ -20,44 +28,82 @@ import numpy as np
 from repro.checkpoint import CheckpointManager
 from repro.configs import get_reduced
 from repro.data import DedupIngest, LoaderConfig, PipelineConfig, TokenLoader
-from repro.data.corpus import load_dataset
+from repro.scenarios import lm_training_corpus
 from repro.train import LoopConfig, OptConfig, Trainer
 
-STEPS = 300
-cfg = get_reduced("llama3.2-1b")
 
-# -- 1. data: dedup the corpus with the paper's chunker before tokenization --
-corpus = load_dataset("DEV", 16)  # backup-like corpus: heavy duplication
-ing = DedupIngest(PipelineConfig(avg_chunk=8192, segment_bytes=1 << 20))
-unique = np.concatenate(list(ing.unique_bytes(corpus)))
-print(f"dedup ingest: {corpus.nbytes >> 20} MiB -> {unique.nbytes >> 20} MiB "
-      f"({ing.savings:.1%} duplicates removed before training)")
-unique = np.minimum(unique, cfg.vocab_size - 1).astype(np.uint8)
+def main(argv=None) -> dict:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--corpus-mb", type=float, default=16.0,
+                    help="LM-text corpus size (scenario-engine generated)")
+    ap.add_argument("--ckpt-every", type=int, default=100)
+    ap.add_argument("--crash-at", type=int, default=200,
+                    help="step to kill the first trainer at; must be a "
+                         "multiple of --ckpt-every and < --steps")
+    ap.add_argument("--avg-chunk", type=int, default=1024,
+                    help="dedup chunk grain; LM text needs the catalog's "
+                         "fine 1 KiB grain to resync (docs/SCENARIOS.md)")
+    ap.add_argument("--seed", type=int, default=303)
+    args = ap.parse_args(argv)
+    if args.crash_at % args.ckpt_every or not 0 < args.crash_at < args.steps:
+        ap.error("--crash-at must be a multiple of --ckpt-every in "
+                 "(0, --steps)")
 
-loader = TokenLoader(unique, LoaderConfig(batch_size=8, seq_len=128))
+    cfg = get_reduced("llama3.2-1b")
 
-workdir = tempfile.mkdtemp(prefix="repro-train-")
-try:
-    def make_trainer():
-        return Trainer(
-            cfg,
-            OptConfig(lr=1e-3, warmup_steps=20, total_steps=STEPS),
-            LoopConfig(total_steps=STEPS, ckpt_every=100, log_every=50),
-            loader,
-            CheckpointManager(os.path.join(workdir, "ckpt")),
-        )
+    # -- 1. data: dedup the corpus with the paper's chunker before
+    #    tokenization; the scenario generator plants real near-duplicates --
+    corpus = lm_training_corpus(args.corpus_mb, seed=args.seed)
+    ing = DedupIngest(
+        PipelineConfig(avg_chunk=args.avg_chunk, segment_bytes=1 << 20))
+    unique = np.concatenate(list(ing.unique_bytes(corpus)))
+    print(f"dedup ingest: {corpus.nbytes >> 20} MiB -> "
+          f"{unique.nbytes >> 20} MiB "
+          f"({ing.savings:.1%} duplicates removed before training)")
+    unique = np.minimum(unique, cfg.vocab_size - 1).astype(np.uint8)
 
-    # -- 2. train, "crash" at step 200, restart, finish ----------------------
-    t1 = make_trainer()
-    t1.run(jax.random.PRNGKey(0), steps=200)  # node failure here
-    print("-- simulated failure after step 199; restarting from checkpoint --")
-    t2 = make_trainer()
-    params, _ = t2.run(jax.random.PRNGKey(0))  # resumes at 200, runs to 300
-    assert t2.history[0]["step"] == 200
+    loader = TokenLoader(unique, LoaderConfig(batch_size=8, seq_len=128))
 
-    ck = t2.ckpt
-    print(f"loss: {t1.history[0]['loss']:.3f} -> {t2.history[-1]['loss']:.3f}")
-    print(f"checkpoint store dedup savings: {ck.dedup_savings:.1%} "
-          f"(adjacent checkpoints share chunks)")
-finally:
-    shutil.rmtree(workdir, ignore_errors=True)
+    workdir = tempfile.mkdtemp(prefix="repro-train-")
+    try:
+        def make_trainer():
+            return Trainer(
+                cfg,
+                OptConfig(lr=1e-3, warmup_steps=min(20, args.steps // 3),
+                          total_steps=args.steps),
+                LoopConfig(total_steps=args.steps,
+                           ckpt_every=args.ckpt_every,
+                           log_every=max(1, args.steps // 6)),
+                loader,
+                CheckpointManager(os.path.join(workdir, "ckpt")),
+            )
+
+        # -- 2. train, "crash" at --crash-at, restart, finish ----------------
+        t1 = make_trainer()
+        t1.run(jax.random.PRNGKey(0), steps=args.crash_at)  # node failure here
+        print(f"-- simulated failure after step {args.crash_at - 1}; "
+              f"restarting from checkpoint --")
+        t2 = make_trainer()
+        params, _ = t2.run(jax.random.PRNGKey(0))  # resumes, runs to --steps
+        assert t2.history[0]["step"] == args.crash_at
+
+        ck = t2.ckpt
+        print(f"loss: {t1.history[0]['loss']:.3f} -> "
+              f"{t2.history[-1]['loss']:.3f}")
+        print(f"checkpoint store dedup savings: {ck.dedup_savings:.1%} "
+              f"(adjacent checkpoints share chunks)")
+        return {
+            "ingest_savings": float(ing.savings),
+            "ckpt_savings": float(ck.dedup_savings),
+            "resume_step": int(t2.history[0]["step"]),
+            "final_step": int(t2.history[-1]["step"]),
+            "first_loss": float(t1.history[0]["loss"]),
+            "final_loss": float(t2.history[-1]["loss"]),
+        }
+    finally:
+        shutil.rmtree(workdir, ignore_errors=True)
+
+
+if __name__ == "__main__":
+    main()

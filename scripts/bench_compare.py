@@ -4,7 +4,8 @@
 
 Matches rows between the two reports by their identity fields (bench title
 plus every configuration axis — shards, transport, impl selections, corpus
-shape) and checks each watched metric of every matched pair against a
+shape, workload scenario) and checks each watched metric of every matched
+pair against a
 tolerance band, exiting non-zero when any check fails — the first
 automated consumer of the BENCH_*.json trajectory (docs/OBSERVABILITY.md).
 
@@ -48,7 +49,7 @@ IDENTITY_FIELDS = (
     "bench", "budget", "figure", "primitive", "dist", "shards",
     "async_flush", "transport", "mask_impl", "step_impl", "fp_impl",
     "pipeline_impl", "packing_impl", "fingerprints", "stream_mb",
-    "block_w", "buckets", "streams", "versions",
+    "block_w", "buckets", "streams", "versions", "scenario",
 )
 
 #: watched metrics -> tolerance class ("throughput" | "occupancy" | "dedup");
@@ -96,8 +97,10 @@ def _check(metric: str, base: float, fresh: float,
     if kind == "occupancy":
         floor = base - tol.occupancy_tol
         return fresh >= floor, f">= {floor:.4g} (-{tol.occupancy_tol} abs)"
+    # strict: a drop of exactly the tolerance still fails, so "a >=1%
+    # relative dedup loss fails the gate" holds with no FP edge case
     floor = base * (1.0 - tol.dedup_tol)
-    return fresh >= floor, f">= {floor:.4g} (-{tol.dedup_tol:.0%} rel)"
+    return fresh > floor, f"> {floor:.4g} (-{tol.dedup_tol:.0%} rel)"
 
 
 def compare(baseline: dict, fresh: dict,

@@ -12,6 +12,7 @@ stage failed:
   4. sharded service check    (scripts/dev_check_sharded.py)
   5. transport check          (scripts/dev_check_transport.py)
   6. observability check      (scripts/dev_check_obs.py)
+  7. scenarios check          (scripts/dev_check_scenarios.py)
 
 This is what CI runs (.github/workflows/ci.yml); locally, ``--fast`` is the
 pre-commit loop and the full form is the pre-PR gate.
@@ -63,6 +64,8 @@ def main(argv=None) -> int:
         ("transport check",
          [py, os.path.join("scripts", "dev_check_transport.py")]),
         ("obs check", [py, os.path.join("scripts", "dev_check_obs.py")]),
+        ("scenarios check",
+         [py, os.path.join("scripts", "dev_check_scenarios.py")]),
     ]
 
     results = [_stage(name, cmd) for name, cmd in stages]

@@ -1,0 +1,98 @@
+"""Dev sanity: the scenario engine's contracts, seconds-fast.
+
+Smoke for ``repro.scenarios`` and its consumers (docs/SCENARIOS.md):
+
+  1. catalog shape — >= 4 scenarios, each with a sane expected-structure
+     descriptor and a positive canonical chunk grain;
+  2. determinism — same seed -> byte-identical corpus (``corpus_digest``),
+     different seed -> different bytes, with no jax import (the package is
+     numpy + stdlib by contract, so shard servers and tests can load it);
+  3. service round-trip — the tiny edit-program corpus ingests, dedups
+     above 1.0, and every versioned object restores byte-exactly;
+  4. the ``scenario`` axis — bench_compare's identity fields include it,
+     and a doctored per-scenario dedup-ratio drop fails the gate.
+
+Exits non-zero on failure.
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__)))
+
+fail = 0
+
+# 2) import purity first: the package must come up without jax
+before = set(sys.modules)
+from repro.scenarios import (  # noqa: E402
+    SCENARIOS, bench_params, corpus_digest, generate,
+)
+if "jax" in set(sys.modules) - before:
+    print("[purity] importing repro.scenarios pulled in jax")
+    fail += 1
+
+# 1) catalog shape
+if len(SCENARIOS) < 4:
+    print(f"[catalog] expected >= 4 scenarios, got {sorted(SCENARIOS)}")
+    fail += 1
+for name, sc in SCENARIOS.items():
+    exp = generate(name, "tiny").expected
+    if not (0.0 < exp.duplicate_fraction < 1.0
+            and 1.0 <= exp.min_dedup_ratio < exp.max_dedup_ratio):
+        print(f"[catalog] {name}: bad descriptor {exp}")
+        fail += 1
+    if sc.avg_chunk <= 0:
+        print(f"[catalog] {name}: bad avg_chunk {sc.avg_chunk}")
+        fail += 1
+
+# 2) determinism
+for name, sc in SCENARIOS.items():
+    d1 = corpus_digest(generate(name, "tiny"))
+    d2 = corpus_digest(generate(name, "tiny"))
+    d3 = corpus_digest(sc.generate("tiny", seed=sc.seed + 1))
+    if d1 != d2:
+        print(f"[determinism] {name}: same seed, different bytes")
+        fail += 1
+    if d1 == d3:
+        print(f"[determinism] {name}: seed does not reach the generator")
+        fail += 1
+
+# 3) service round-trip on the tiny edit-program corpus
+from repro.service import DedupService  # noqa: E402
+
+corpus = generate("dataset_revisions", "tiny")
+svc = DedupService(params=bench_params("dataset_revisions", "tiny"), slots=4,
+                   min_bucket=1024, with_fingerprints=False)
+for obj, data in corpus.objects:
+    svc.submit(obj, data)
+svc.flush()
+ratio = svc.stats().dedup_ratio
+if not ratio > 1.0:
+    print(f"[service] tiny revision corpus did not dedup (ratio {ratio:.3f})")
+    fail += 1
+for obj, data in corpus.objects:
+    if svc.get(obj) != data.tobytes():
+        print(f"[service] restore mismatch for {obj!r}")
+        fail += 1
+
+# 4) the scenario identity axis gates per-scenario ratio drops
+import bench_compare as bc  # noqa: E402
+
+if "scenario" not in bc.IDENTITY_FIELDS:
+    print("[gate] bench_compare lost the 'scenario' identity axis")
+    fail += 1
+row = {"bench": "scenarios", "budget": "quick", "scenario": "lm_text",
+       "dedup_ratio": 1.619}
+bad = dict(row, dedup_ratio=row["dedup_ratio"] * 0.99)
+_, failures = bc.compare({"results": [row]}, {"results": [bad]})
+if not any("dedup_ratio" in f for f in failures):
+    print("[gate] a 1% scenario dedup-ratio drop passed the gate")
+    fail += 1
+_, failures = bc.compare({"results": [row]},
+                         {"results": [dict(row, scenario="other")]})
+if not any("missing" in f for f in failures):
+    print("[gate] a dropped scenario row passed the gate")
+    fail += 1
+
+print("dev_check_scenarios:", "FAIL" if fail else "OK")
+sys.exit(1 if fail else 0)

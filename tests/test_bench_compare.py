@@ -97,6 +97,46 @@ class TestCompare:
         assert len(failures) == 1  # the same 2x drop now out of band
 
 
+class TestScenarioAxis:
+    """The scenario engine's identity axis (benchmarks/bench_scenarios.py):
+    per-scenario rows are distinct gate targets, and a workload's dedup
+    ratio is gated as tightly as any other quality metric."""
+
+    def test_scenario_is_an_identity_axis(self):
+        # same bench, different scenario: distinct rows that never match
+        base = report([row(scenario="backup_snapshots")])
+        _, failures = bc.compare(base, report([row(scenario="lm_text")]))
+        assert any("missing" in f for f in failures)
+        assert "scenario" in bc.IDENTITY_FIELDS
+
+    def test_scenario_rows_compare_independently(self):
+        base = report([row(scenario="backup_snapshots", dedup_ratio=3.0),
+                       row(scenario="lm_text", dedup_ratio=1.6)])
+        # only the doctored scenario fails; the healthy one stays green
+        fresh = report([row(scenario="backup_snapshots", dedup_ratio=3.0),
+                        row(scenario="lm_text", dedup_ratio=1.5)])
+        _, failures = bc.compare(base, fresh)
+        assert len(failures) == 1
+        assert "dedup_ratio" in failures[0] and "lm_text" in failures[0]
+
+    def test_exactly_one_percent_drop_fails(self):
+        # the acceptance contract: a >=1% relative dedup loss fails, with
+        # no pass-at-the-boundary edge case
+        base = report([row(scenario="dataset_revisions", dedup_ratio=2.734)])
+        fresh = report([row(scenario="dataset_revisions",
+                            dedup_ratio=2.734 * 0.99)])
+        _, failures = bc.compare(base, fresh)
+        assert len(failures) == 1 and "dedup_ratio" in failures[0]
+
+    def test_dropped_scenario_row_is_a_coverage_failure(self):
+        base = report([row(scenario="dataset_revisions"),
+                       row(scenario="container_images")])
+        _, failures = bc.compare(
+            base, report([row(scenario="dataset_revisions")]))
+        assert len(failures) == 1
+        assert "missing" in failures[0] and "container_images" in failures[0]
+
+
 class TestCLI:
     def test_committed_baseline_self_compares_clean(self, capsys):
         path = os.path.join(REPO, "BENCH_quick.json")
@@ -117,6 +157,23 @@ class TestCLI:
         bad.write_text(json.dumps(doc))
         assert bc.main([path, str(bad)]) == 1
         assert "REGRESSION dedup_ratio" in capsys.readouterr().err
+
+    def test_doctored_scenario_ratio_fails_cli(self, tmp_path, capsys):
+        """Acceptance pin: a 1% relative dedup-ratio drop in any scenario
+        row of the committed baseline fails the gate."""
+        path = os.path.join(REPO, "BENCH_quick.json")
+        doc = json.load(open(path))
+        doctored = 0
+        for r in doc["results"]:
+            if r.get("scenario") not in (None, "none"):
+                r["dedup_ratio"] *= 0.99
+                doctored += 1
+        assert doctored >= 4  # the committed baseline carries the catalog
+        bad = tmp_path / "doctored_scenarios.json"
+        bad.write_text(json.dumps(doc))
+        assert bc.main([path, str(bad)]) == 1
+        err = capsys.readouterr().err
+        assert err.count("REGRESSION dedup_ratio") == doctored
 
     def test_unusable_input_exits_2(self, tmp_path):
         junk = tmp_path / "junk.json"

@@ -142,6 +142,52 @@ def test_matrix_sharded(pipeline_impl, num_shards, packing_impl,
             assert len(r.shards) == len(r.keys), label
 
 
+def _scenario_corpus():
+    """Tiny-budget scenario-engine corpora (dataset revisions + backup
+    snapshots): realistic versioned objects — seeded edit programs over
+    structured rows, daily snapshots over a mixed-entropy disk base — so
+    the matrix also covers the shifted-duplicate workload CDC exists for,
+    not just the synthetic edge regimes above."""
+    from repro.scenarios import generate
+
+    corpus = []
+    for name in ("dataset_revisions", "backup_snapshots"):
+        c = generate(name, "tiny")
+        corpus.extend((f"{name}/{obj}", data) for obj, data in c.objects)
+    return corpus
+
+
+@pytest.fixture(scope="module")
+def scenario_state():
+    corpus = _scenario_corpus()
+    svc = _ingest(DedupService(params=P, slots=2, min_bucket=1024), corpus)
+    state = _service_state(svc, corpus)
+    for name, data in corpus:  # versioned corpora restore byte-exactly
+        assert state[2][name] == data.tobytes()
+    return corpus, state
+
+
+@pytest.mark.parametrize("packing_impl", PACKINGS)
+@pytest.mark.parametrize("pipeline_impl", PIPELINES)
+def test_matrix_scenario_corpora(pipeline_impl, packing_impl, scenario_state):
+    corpus, want = scenario_state
+    svc = _ingest(DedupService(
+        params=P, slots=2, min_bucket=1024, pipeline_impl=pipeline_impl,
+        packing_impl=packing_impl, cross_check_pipeline=True,
+        cross_check_packing=True,
+    ), corpus)
+    _assert_same_state(_service_state(svc, corpus), want,
+                       f"scenario/{pipeline_impl}/{packing_impl}")
+
+
+def test_matrix_scenario_corpora_sharded(scenario_state):
+    corpus, want = scenario_state
+    with ShardedDedupService(2, params=P, slots=2, min_bucket=1024) as svc:
+        _ingest(svc, corpus)
+        _assert_same_state(_service_state(svc, corpus), want,
+                           "scenario/shards=2")
+
+
 def test_matrix_limb_boundary_chunks():
     """64 KiB max-size params: 65535/65536-byte chunks sit on the
     fingerprint limb-exactness bound; fused and split must still agree."""

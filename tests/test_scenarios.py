@@ -1,0 +1,153 @@
+"""Scenario engine contracts: determinism + golden dedup-ratio pins.
+
+Two layers, mirroring tests/test_occupancy.py:
+
+* the *generator* contract — ``generate(name, budget)`` is a pure
+  function of (name, budget, seed): byte-identical in-process, in a fresh
+  subprocess, and sensitive to the seed (``corpus_digest`` is the
+  canonical fingerprint);
+* the *service* contract — ``benchmarks/bench_scenarios.py`` run at the
+  quick budget must land every scenario's measured dedup ratio inside a
+  pinned band (chunking is bit-deterministic, so on any machine these are
+  exact per seed; the bands absorb deliberate chunker tuning, not
+  regressions).  The row pins double as a check that the bench emits the
+  ``scenario`` identity axis bench_compare gates on.
+"""
+import os
+import subprocess
+import sys
+
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from repro.scenarios import (
+    BUDGETS,
+    SCENARIOS,
+    bench_params,
+    corpus_digest,
+    generate,
+)
+
+REPO = os.path.join(os.path.dirname(__file__), "..")
+
+#: golden quick-budget dedup-ratio pins (measured; ~±5% bands — tighter
+#: than the catalog's contract bands, which absorb budget-level variety)
+GOLDEN_QUICK = {
+    "dataset_revisions": (2.60, 2.87),
+    "backup_snapshots": (2.75, 3.05),
+    "lm_text": (1.54, 1.70),
+    "container_images": (2.13, 2.35),
+}
+
+
+# -- generator contract ------------------------------------------------------
+
+class TestCatalog:
+    def test_catalog_shape(self):
+        assert len(SCENARIOS) >= 4
+        assert set(GOLDEN_QUICK) == set(SCENARIOS)
+        for name, sc in SCENARIOS.items():
+            assert sc.name == name
+            assert sc.avg_chunk > 0
+            assert sc.summary
+
+    @pytest.mark.parametrize("name", sorted(SCENARIOS))
+    def test_descriptor_sanity(self, name):
+        corpus = generate(name, "tiny")
+        exp = corpus.expected
+        assert 0.0 < exp.duplicate_fraction < 1.0
+        assert 1.0 <= exp.min_dedup_ratio < exp.max_dedup_ratio
+        assert corpus.logical_bytes > 0
+        names = [n for n, _ in corpus.objects]
+        assert len(names) == len(set(names))  # objects individually named
+        for _, data in corpus.objects:
+            assert data.dtype.name == "uint8" and data.size > 0
+
+    @pytest.mark.parametrize("name", sorted(SCENARIOS))
+    def test_all_budgets_declared(self, name):
+        # every budget tier must generate (loud KeyError for table gaps);
+        # only the cheap tiers are materialized here
+        for budget in BUDGETS[:2]:
+            assert generate(name, budget).budget == budget
+        with pytest.raises(KeyError):
+            SCENARIOS[name].generate("nonexistent")
+
+    def test_same_seed_same_bytes(self):
+        for name in SCENARIOS:
+            a, b = generate(name, "tiny"), generate(name, "tiny")
+            assert corpus_digest(a) == corpus_digest(b), name
+
+    def test_different_seed_different_bytes(self):
+        for name, sc in SCENARIOS.items():
+            a = generate(name, "tiny")
+            b = sc.generate("tiny", seed=sc.seed + 1)
+            assert corpus_digest(a) != corpus_digest(b), name
+
+    def test_cross_process_determinism(self):
+        """The digest must agree with a fresh interpreter: the generators
+        depend on nothing but numpy PCG64 streams (no hash(), no time, no
+        filesystem) — the contract that makes BENCH rows and golden pins
+        portable."""
+        code = (
+            "from repro.scenarios import SCENARIOS, corpus_digest, generate\n"
+            "for n in sorted(SCENARIOS):\n"
+            "    print(n, corpus_digest(generate(n, 'tiny')))\n"
+        )
+        env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+        out = subprocess.run([sys.executable, "-c", code], env=env,
+                             capture_output=True, text=True, check=True,
+                             cwd=REPO).stdout.split()
+        theirs = dict(zip(out[::2], out[1::2]))
+        ours = {n: corpus_digest(generate(n, "tiny"))
+                for n in sorted(SCENARIOS)}
+        assert theirs == ours
+
+    def test_bench_params_per_scenario_grain(self):
+        # lm_text dedups at a finer canonical grain (docs/SCENARIOS.md);
+        # tiny corpora always chunk at 1 KiB so matrix cells stay fast
+        assert bench_params("lm_text", "quick").avg_size == 1024
+        assert bench_params("dataset_revisions", "quick").avg_size == 8192
+        assert bench_params("dataset_revisions", "tiny").avg_size == 1024
+
+
+# -- service contract: golden pins via the benchmark -------------------------
+
+@pytest.fixture(scope="module")
+def scenario_rows():
+    from benchmarks.bench_scenarios import run
+
+    return {r["scenario"]: r for r in run(budget="quick")}
+
+
+def test_every_scenario_reported(scenario_rows):
+    assert set(scenario_rows) == set(SCENARIOS)
+
+
+@pytest.mark.parametrize("name", sorted(GOLDEN_QUICK))
+def test_golden_dedup_ratio_pins(name, scenario_rows):
+    lo, hi = GOLDEN_QUICK[name]
+    r = scenario_rows[name]
+    assert lo <= r["dedup_ratio"] <= hi, (name, r["dedup_ratio"])
+    # and the catalog's own (looser) contract band agrees
+    assert r["band_lo"] <= r["dedup_ratio"] <= r["band_hi"], name
+
+
+def test_rows_carry_the_compare_identity_axes(scenario_rows):
+    """bench_compare matches rows on these fields; losing one would make
+    scenario rows collide or silently stop being gated."""
+    for name, r in scenario_rows.items():
+        for field in ("scenario", "budget", "mask_impl", "step_impl",
+                      "fp_impl", "pipeline_impl", "packing_impl",
+                      "fingerprints", "shards"):
+            assert field in r, (name, field)
+        assert r["scenario"] == name
+        assert r["dedup_ratio"] > 1.0  # every workload actually dedups
+        assert r["ingest_gbps"] > 0 and r["restore_gbps"] > 0
+
+
+def test_dedup_consistent_with_chunk_accounting(scenario_rows):
+    for name, r in scenario_rows.items():
+        assert r["unique_chunks"] <= r["chunks"], name
+        assert 0.0 < r["space_savings"] < 1.0, name
+        assert r["space_savings"] == pytest.approx(1 - 1 / r["dedup_ratio"])
