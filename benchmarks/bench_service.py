@@ -62,12 +62,16 @@ def run(budget: str = "small") -> None:
     raw_gbps = _raw_chunking_gbps(corpus, params)
 
     rows = []
-    for with_fp in (False, True):
+    # cells: both fingerprint modes on the raw store, plus one compressing
+    # cell (codec is a bench-compare identity axis: the zlib row's
+    # compressed_ratio regressing or vanishing fails the gate)
+    for with_fp, codec in ((False, "none"), (True, "none"), (True, "zlib")):
         # warmup pass compiles the per-bucket programs, then a timed cold store
         for _ in range(2):
             svc = DedupService(params=params, slots=8, with_fingerprints=with_fp,
                                mask_impl=MASK_IMPL, step_impl=STEP_IMPL,
-                               fp_impl=FP_IMPL, pipeline_impl=PIPELINE_IMPL)
+                               fp_impl=FP_IMPL, pipeline_impl=PIPELINE_IMPL,
+                               codec=codec)
             t0 = time.perf_counter()
             for i, v in enumerate(versions):
                 svc.submit(f"v{i:03d}", v)
@@ -88,17 +92,19 @@ def run(budget: str = "small") -> None:
             "fp_impl": FP_IMPL,
             "pipeline_impl": PIPELINE_IMPL,
             "fingerprints": int(with_fp),
+            "codec": codec,
             "corpus_mb": total / common.MiB,
             "versions": len(versions),
             "raw_chunk_gbps": raw_gbps,
             "ingest_gbps": total / ingest_s / 1e9,
             "restore_gbps": total / restore_s / 1e9,
             "dedup_ratio": st.dedup_ratio,
+            "compressed_ratio": st.compressed_ratio,
             "batch_occupancy": st.batch_occupancy,
         })
         # telemetry of the timed (second) cold-store ingest + the restores:
         # the dispatch-latency/backpressure story behind the rows above
-        common.emit_metrics(f"service_fp{int(with_fp)}", svc.metrics())
+        common.emit_metrics(f"service_fp{int(with_fp)}_{codec}", svc.metrics())
     common.emit(rows, "service: end-to-end ingest vs raw chunking")
 
 

@@ -35,14 +35,14 @@ PIPELINE_IMPL = "split"  # pinned: rows must not drift with REPRO_PIPELINE_IMPL
 
 
 def _cell(versions, total: int, shards: int, async_flush: bool,
-          budget: str) -> dict:
+          budget: str, codec: str = "none") -> dict:
     params = derived_params(8192)
     # warmup run compiles the per-bucket programs; second run is timed
     for it in range(2):
         svc = ShardedDedupService(shards, params=params, slots=8,
                                   mask_impl=MASK_IMPL, step_impl=STEP_IMPL,
                                   fp_impl=FP_IMPL, pipeline_impl=PIPELINE_IMPL,
-                                  async_flush=async_flush)
+                                  async_flush=async_flush, codec=codec)
         t0 = time.perf_counter()
         for i, v in enumerate(versions):
             svc.submit(f"v{i:03d}", v)
@@ -60,7 +60,7 @@ def _cell(versions, total: int, shards: int, async_flush: bool,
     per = svc.shard_stats()
     uniques = [s["unique_chunks"] for s in per]
     common.emit_metrics(
-        f"sharded_s{shards}_async{int(async_flush)}", svc.metrics()
+        f"sharded_s{shards}_async{int(async_flush)}_{codec}", svc.metrics()
     )
     svc.close()
     return {
@@ -72,10 +72,12 @@ def _cell(versions, total: int, shards: int, async_flush: bool,
         "step_impl": STEP_IMPL,
         "fp_impl": FP_IMPL,
         "pipeline_impl": PIPELINE_IMPL,
+        "codec": codec,
         "corpus_mb": total / common.MiB,
         "ingest_gbps": total / ingest_s / 1e9,
         "restore_gbps": total / restore_s / 1e9,
         "dedup_ratio": st.dedup_ratio,
+        "compressed_ratio": st.compressed_ratio,
         "stored_bytes": st.stored_bytes,
         "unique_chunks": st.unique_chunks,
         "shard_balance": min(uniques) / max(uniques) if max(uniques) else 1.0,
@@ -90,8 +92,19 @@ def run(budget: str = "small") -> list:
     for shards in shard_counts:
         for async_flush in (False, True):
             rows.append(_cell(versions, total, shards, async_flush, budget))
+    # one compressing cell: dedup_ratio must not move (the codec touches
+    # payload bytes, never chunk identity), and the no-inflate fallback
+    # bounds compressed_ratio >= dedup_ratio even on this high-entropy
+    # synthetic corpus (the strict > win shows on the structured scenario
+    # corpora — bench_scenarios' rows, gated by bench_compare)
+    rows.append(_cell(versions, total, shard_counts[-1], True, budget,
+                      codec="zlib"))
     ratios = {f"{r['dedup_ratio']:.9f}" for r in rows}
     assert len(ratios) == 1, f"dedup ratio drifted across cells: {ratios}"
+    zrow = rows[-1]
+    assert zrow["compressed_ratio"] >= zrow["dedup_ratio"], (
+        "zlib cell inflated payloads: compressed_ratio "
+        f"{zrow['compressed_ratio']:.3f} < dedup {zrow['dedup_ratio']:.3f}")
     common.emit(rows, "sharded service: shard scaling + async vs sync flush")
     return rows
 

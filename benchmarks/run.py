@@ -105,7 +105,7 @@ QUICK_MODULES = [
 #: synthetic-corpus benchmarks use the "none" default
 DEFAULTS = {"mask_impl": "jnp", "step_impl": "wide", "fp_impl": "reference",
             "pipeline_impl": "split", "packing_impl": "off", "shards": 1,
-            "transport": "local", "scenario": "none"}
+            "transport": "local", "scenario": "none", "codec": "none"}
 
 
 def main() -> None:

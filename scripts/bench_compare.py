@@ -49,7 +49,7 @@ IDENTITY_FIELDS = (
     "bench", "budget", "figure", "primitive", "dist", "shards",
     "async_flush", "transport", "mask_impl", "step_impl", "fp_impl",
     "pipeline_impl", "packing_impl", "fingerprints", "stream_mb",
-    "block_w", "buckets", "streams", "versions", "scenario",
+    "block_w", "buckets", "streams", "versions", "scenario", "codec",
 )
 
 #: watched metrics -> tolerance class ("throughput" | "occupancy" | "dedup");
@@ -65,6 +65,9 @@ WATCHED = {
     "batch_occupancy": "occupancy",
     "row_fill": "occupancy",
     "dedup_ratio": "dedup",
+    # machine-independent like dedup_ratio: same seeded corpus + same
+    # codec = same compressed payload, so the tight relative band applies
+    "compressed_ratio": "dedup",
 }
 
 

@@ -103,6 +103,12 @@ def print_report(st, ingested: int, with_fp: bool = True):
     print(f"logical bytes    {st.logical_bytes:>14,}  ({human(st.logical_bytes)})")
     print(f"stored bytes     {st.stored_bytes:>14,}  ({human(st.stored_bytes)})")
     print(f"dedup ratio      {st.dedup_ratio:14.2f}x")
+    if st.codec != "none":
+        # compressed_ratio = dedup x compression, the estimators' headline
+        print(f"compressed bytes {st.compressed_bytes:>14,}  "
+              f"({human(st.compressed_bytes)}, codec={st.codec})")
+        print(f"compressed ratio {st.compressed_ratio:14.2f}x  "
+              "(dedup x compression)")
     print(f"space savings    {st.space_savings:14.1%}")
     print(f"chunks           {st.total_chunks:>14,}  ({st.unique_chunks:,} unique)")
     if st.total_chunks:
@@ -136,6 +142,9 @@ def main(argv=None) -> int:
     ap.add_argument("--slots", type=int, default=8)
     ap.add_argument("--flush-every", type=int, default=64,
                     help="commit cadence (objects buffered per flush)")
+    ap.add_argument("--codec", default=None, choices=["none", "zlib", "lz4"],
+                    help="per-chunk store codec (default: the depot's "
+                         "manifest codec, else $REPRO_STORE_CODEC)")
     ap.add_argument("--no-fp", action="store_true",
                     help="skip accelerator fingerprints (faster on CPU; "
                          "drops only the fp-estimated line)")
@@ -149,7 +158,7 @@ def main(argv=None) -> int:
             ap.error(f"path does not exist: {path}")
 
     kw = dict(avg_chunk=args.avg_chunk, slots=args.slots,
-              with_fingerprints=not args.no_fp)
+              with_fingerprints=not args.no_fp, codec=args.codec)
     if args.store:
         svc = DedupService.open(args.store, **kw)
     else:
@@ -186,6 +195,9 @@ def main(argv=None) -> int:
             "logical_bytes": st.logical_bytes,
             "stored_bytes": st.stored_bytes,
             "dedup_ratio": st.dedup_ratio,
+            "codec": st.codec,
+            "compressed_bytes": st.compressed_bytes,
+            "compressed_ratio": st.compressed_ratio,
             "space_savings": st.space_savings,
             "total_chunks": st.total_chunks,
             "unique_chunks": st.unique_chunks,

@@ -18,6 +18,10 @@ _EXPORTS = {
     "BlockStore": ".store",
     "DirBlockStore": ".store",
     "sha256_key": ".store",
+    "BlockCorruptionError": ".store",
+    "available_codecs": ".store",
+    "resolve_codec": ".store",
+    "negotiate_codec": ".store",
 }
 
 _SUBMODULES = ("dist_index", "fingerprint", "index", "store")

@@ -32,6 +32,7 @@ from typing import Dict, List, Optional
 
 from repro.core.params import SeqCDCParams, derived_params
 from repro.dedup import BlockStore, DirBlockStore, FingerprintIndex
+from repro.dedup.store import BlockCorruptionError
 from repro.obs import (
     MetricsRegistry,
     PhaseClock,
@@ -137,10 +138,23 @@ class ServiceStats:
     fp_estimated_savings: float  # 62-bit fp estimate, cumulative over ingests
     batches: int
     batch_occupancy: float
+    #: payload bytes the store actually holds (== stored_bytes when the
+    #: store codec is "none"; smaller under compression)
+    compressed_bytes: int = 0
+    codec: str = "none"  # the store's write codec
 
     @property
     def dedup_ratio(self) -> float:
         return self.logical_bytes / self.stored_bytes if self.stored_bytes else 1.0
+
+    @property
+    def compressed_ratio(self) -> float:
+        """End-to-end reduction: logical bytes per *payload* byte held —
+        dedup x compression (== :attr:`dedup_ratio` for codec-less stores),
+        the ratio the exemplar estimators report."""
+        if not self.compressed_bytes:
+            return self.dedup_ratio
+        return self.logical_bytes / self.compressed_bytes
 
     @property
     def space_savings(self) -> float:
@@ -325,13 +339,18 @@ class DedupService(ServiceBase):
         cross_check_fps: bool = False,
         cross_check_pipeline: bool = False,
         cross_check_packing: bool = False,
+        codec: Optional[str] = None,
     ):
         self.params = params or derived_params(avg_chunk)
-        self.store = store if store is not None else BlockStore()
+        # codec applies to the default store only; an explicit ``store``
+        # arrives already configured (None resolves $REPRO_STORE_CODEC)
+        self.store = store if store is not None else BlockStore(codec=codec)
         self.recipes = recipes if recipes is not None else RecipeTable()
         # per-service (not global) registry: tests and side-by-side services
         # never share counters; the scheduler reports into the same one
         self.obs = MetricsRegistry()
+        if hasattr(self.store, "attach_obs"):
+            self.store.attach_obs(self.obs)
         self.scheduler = ChunkScheduler(
             self.params, registry=self.obs, slots=slots, min_bucket=min_bucket,
             mask_impl=mask_impl, step_impl=step_impl, fp_impl=fp_impl,
@@ -350,10 +369,16 @@ class DedupService(ServiceBase):
         self._in_flight: set[str] = set()  # names submitted, not yet flushed
 
     @classmethod
-    def open(cls, root: str, **kwargs) -> "DedupService":
-        """File-backed service at ``root``: blocks + recipes survive restarts."""
+    def open(cls, root: str, *, codec: Optional[str] = None,
+             hot_bytes: int = 0, **kwargs) -> "DedupService":
+        """File-backed service at ``root``: blocks + recipes survive restarts.
+
+        ``codec`` selects the store's write codec (None: the depot's
+        manifest codec, else ``$REPRO_STORE_CODEC``); ``hot_bytes`` enables
+        cold tiering on the underlying :class:`DirBlockStore`.
+        """
         os.makedirs(root, exist_ok=True)
-        store = DirBlockStore(root)
+        store = DirBlockStore(root, codec=codec, hot_bytes=hot_bytes)
         recipes = RecipeTable(os.path.join(root, "recipes.json"))
         return cls(store=store, recipes=recipes, **kwargs)
 
@@ -449,7 +474,14 @@ class DedupService(ServiceBase):
                 # "rpc" = the block-gather seam; for this single-store
                 # service it is the same seam served in-process
                 with self._phase("rpc"):
-                    data = self.store.get_stream(r.keys)
+                    try:
+                        data = self.store.get_stream(r.keys)
+                    except BlockCorruptionError as e:
+                        # a block that fails to decode is the same contract
+                        # breach as a digest mismatch: corrupt storage
+                        raise IntegrityError(
+                            f"object {name!r}: {e}"
+                        ) from e
                 with self._phase("verify"):
                     data = verify_restore(r, data)
             self.obs.observe("service.get_s", time.perf_counter() - t0)
@@ -514,4 +546,6 @@ class DedupService(ServiceBase):
             fp_estimated_savings=self.fp_index.savings,
             batches=sched.dispatches,
             batch_occupancy=sched.occupancy,
+            compressed_bytes=self.store.compressed_bytes,
+            codec=self.store.codec,
         )

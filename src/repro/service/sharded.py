@@ -61,6 +61,7 @@ import numpy as np
 
 from repro.core.params import SeqCDCParams, derived_params
 from repro.dedup import BlockStore, DirBlockStore, FingerprintIndex
+from repro.dedup.store import BlockCorruptionError
 from repro.dedup.dist_index import route_host, routed_fp_tables
 from repro.obs import MetricsRegistry, span
 
@@ -113,6 +114,7 @@ class ShardedDedupService(ServiceBase):
         mesh_axis: str = "data",
         capacity_factor: float = 1.5,
         transport: str = "local",
+        codec: Optional[str] = None,
     ):
         if stores is not None and len(stores) != num_shards:
             raise ValueError(f"{len(stores)} stores for {num_shards} shards")
@@ -133,9 +135,11 @@ class ShardedDedupService(ServiceBase):
         if self.num_shards < 1:
             raise ValueError("num_shards must be >= 1")
         self.params = params or derived_params(avg_chunk)
+        # codec applies to default-constructed stores only; explicit stores
+        # (including remote clients) arrive already configured
         self.stores: List[BlockStore] = (
             list(stores) if stores is not None
-            else [BlockStore() for _ in range(self.num_shards)]
+            else [BlockStore(codec=codec) for _ in range(self.num_shards)]
         )
         self.recipes = recipes if recipes is not None else RecipeTable()
         # one registry for the whole service: scheduler dispatches, writer
@@ -147,6 +151,12 @@ class ShardedDedupService(ServiceBase):
                 # RemoteShardClient contract: a settable .registry turns on
                 # its per-op rpc.client.* accounting
                 st.registry = self.obs
+        else:
+            for s, st in enumerate(self.stores):
+                if hasattr(st, "attach_obs"):
+                    # shard-labeled compression telemetry (store.compress_s,
+                    # store.compressed_bytes{shard=}) into the one registry
+                    st.attach_obs(self.obs, shard=s)
         # fingerprints are mandatory: they are the routing key
         self.scheduler = ChunkScheduler(
             self.params, registry=self.obs, slots=slots, min_bucket=min_bucket,
@@ -193,7 +203,9 @@ class ShardedDedupService(ServiceBase):
         self._in_flight: set[str] = set()  # names submitted, not yet flushed
 
     @classmethod
-    def open(cls, root: str, num_shards: int = 4, **kwargs) -> "ShardedDedupService":
+    def open(cls, root: str, num_shards: int = 4, *,
+             codec: Optional[str] = None, hot_bytes: int = 0,
+             **kwargs) -> "ShardedDedupService":
         """File-backed sharded service: one block depot per shard under
         ``root/shard-NN/`` plus a shared recipe table.  The shard count is
         pinned in ``root/sharding.json`` — reopening with a different N would
@@ -223,12 +235,18 @@ class ShardedDedupService(ServiceBase):
         try:
             roots = shard_roots(root, num_shards)
             if kwargs.get("transport") == "remote":
-                servers = spawn_shard_servers(roots)
-                stores = [h.connect() for h in servers]
+                # each server resolves codec itself (arg > shard manifest >
+                # env); the client hello then negotiates the wire codec
+                servers = spawn_shard_servers(roots, codec=codec,
+                                              hot_bytes=hot_bytes)
+                stores = [h.connect(codec=codec, shard=i)
+                          for i, h in enumerate(servers)]
             else:
-                stores = [DirBlockStore(r) for r in roots]
+                stores = [DirBlockStore(r, codec=codec, hot_bytes=hot_bytes)
+                          for r in roots]
             recipes = RecipeTable(os.path.join(root, "recipes.json"))
-            svc = cls(num_shards, stores=stores, recipes=recipes, **kwargs)
+            svc = cls(num_shards, stores=stores, recipes=recipes,
+                      codec=codec, **kwargs)
         except BaseException:
             for h in servers:
                 h.stop()
@@ -489,12 +507,18 @@ class ShardedDedupService(ServiceBase):
                 # same seam served in-process on the local one)
                 parts: List[Optional[bytes]] = [None] * len(r.keys)
                 with self._phase("rpc"):
-                    for shard, idxs in by_shard.items():
-                        blocks = self.stores[shard].get_blocks(
-                            [r.keys[i] for i in idxs]
-                        )
-                        for i, b in zip(idxs, blocks):
-                            parts[i] = b
+                    try:
+                        for shard, idxs in by_shard.items():
+                            blocks = self.stores[shard].get_blocks(
+                                [r.keys[i] for i in idxs]
+                            )
+                            for i, b in zip(idxs, blocks):
+                                parts[i] = b
+                    except BlockCorruptionError as e:
+                        # a block that fails to decode (locally or typed
+                        # across the wire) is corrupt storage, the same
+                        # contract breach as a digest mismatch
+                        raise IntegrityError(f"object {name!r}: {e}") from e
                 with self._phase("verify"):
                     data = verify_restore(
                         r, b"".join(parts)  # type: ignore[arg-type]
@@ -624,6 +648,11 @@ class ShardedDedupService(ServiceBase):
             fp_estimated_savings=(fp_orig - fp_dedup) / fp_orig if fp_orig else 0.0,
             batches=sched.dispatches,
             batch_occupancy=sched.occupancy,
+            compressed_bytes=sum(
+                int(p.get("compressed_bytes", p["stored_bytes"]))
+                for p in per
+            ),
+            codec=getattr(self.stores[0], "codec", "none"),
         )
 
     def _shard_metric_snapshots(self) -> List[Optional[dict]]:
@@ -651,6 +680,9 @@ class ShardedDedupService(ServiceBase):
                 "shard": s,
                 "stored_bytes": acct["stored_bytes"],
                 "logical_bytes": acct["logical_bytes"],
+                "compressed_bytes": int(
+                    acct.get("compressed_bytes", acct["stored_bytes"])
+                ),
                 "unique_chunks": acct["unique_chunks"],
                 "fp_entries": len(self.fp_index[s].seen),
             })

@@ -45,6 +45,7 @@ import threading
 import time
 from typing import Dict, List, Optional, Tuple
 
+from repro.dedup.store import encode_block, resolve_codec, sha256_key
 from repro.obs import MetricsRegistry, current_context, labeled, span
 
 from . import protocol as P
@@ -52,10 +53,20 @@ from .protocol import ShardTransportError
 
 
 class RemoteShardClient:
-    """Store-shaped proxy for one shard server (see module docstring)."""
+    """Store-shaped proxy for one shard server (see module docstring).
+
+    Protocol v4: the client sends its preferred ``codec`` in a ``hello``
+    right after connect; every later :meth:`put_blocks` hashes and
+    compresses the chunks *client-side under the negotiated codec* — and
+    since the sharded service calls ``put_blocks`` from the per-shard
+    writer thread, the encode runs off the ingest thread and the bytes
+    travel compressed.  ``codec="none"`` (the default) keeps the legacy
+    raw frames byte-for-byte.
+    """
 
     def __init__(self, host: str, port: int, *, timeout: float = 120.0,
-                 registry: Optional[MetricsRegistry] = None):
+                 registry: Optional[MetricsRegistry] = None,
+                 codec: Optional[str] = None, shard: int = 0):
         self.host, self.port = host, int(port)
         self._timeout = timeout
         self._lock = threading.Lock()
@@ -63,9 +74,16 @@ class RemoteShardClient:
         #: owning service's registry; None → RPCs go uncounted.  Settable
         #: after construction (the sharded service attaches its own).
         self.registry = registry
+        self.shard = int(shard)
         self._sock = socket.create_connection((host, self.port),
                                               timeout=timeout)
         self._sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+        #: wire codec for put_blocks payloads, fixed by the v4 hello
+        self.codec = "none"
+        preferred = resolve_codec(codec)
+        if preferred != "none":
+            meta, _ = self._rpc(P.OP_HELLO, {"codec": preferred})
+            self.codec = str(meta["codec"])
 
     # -- transport core ---------------------------------------------------------
     def _rpc(self, op: int, meta: Optional[dict] = None,
@@ -147,6 +165,34 @@ class RemoteShardClient:
         return self.put_blocks([bytes(chunk)])[0]
 
     def put_blocks(self, chunks: List[bytes]) -> List[str]:
+        if self.codec != "none":
+            # v4 pre-compressed frame: hash + encode here (the caller is
+            # the shard's writer thread, so this is off the ingest thread),
+            # ship payloads compressed, server files them as-is.  Per-item
+            # ``codecs``: encode_block falls back to raw on incompressible
+            # chunks, and those ship (and are stored) raw in the same frame.
+            keys, raw_sizes, codecs, payloads = [], [], [], []
+            t0 = time.perf_counter()
+            for c in chunks:
+                keys.append(sha256_key(c))
+                raw_sizes.append(len(c))
+                eff, payload = encode_block(self.codec, c)
+                codecs.append(eff)
+                payloads.append(payload)
+            reg = self.registry
+            if reg is not None:
+                reg.observe("store.compress_s", time.perf_counter() - t0)
+                reg.inc(labeled("store.compressed_bytes", shard=self.shard),
+                        sum(len(p) for p, e in zip(payloads, codecs)
+                            if e != "none"))
+            self._rpc(P.OP_PUT_BLOCKS, {
+                "codec": self.codec,
+                "codecs": codecs,
+                "keys": keys,
+                "raw_sizes": raw_sizes,
+                "sizes": [len(p) for p in payloads],
+            }, b"".join(payloads))
+            return keys
         meta, _ = self._rpc(P.OP_PUT_BLOCKS,
                             {"sizes": [len(c) for c in chunks]},
                             b"".join(chunks))
@@ -238,6 +284,10 @@ class RemoteShardClient:
     def unique_chunks(self) -> int:
         return int(self.stat()["unique_chunks"])
 
+    @property
+    def compressed_bytes(self) -> int:
+        return int(self.stat()["compressed_bytes"])
+
     def __repr__(self):
         state = "dead" if self._dead else "up"
         return f"RemoteShardClient({self.host}:{self.port}, {state})"
@@ -250,7 +300,8 @@ class ShardServerProcess:
     """One spawned ``shard_server`` subprocess (spawn, announce, stop, kill)."""
 
     def __init__(self, root: str, *, host: str = "127.0.0.1", port: int = 0,
-                 timeout: float = 60.0):
+                 timeout: float = 60.0, codec: Optional[str] = None,
+                 hot_bytes: int = 0, shard: int = 0):
         self.root = root
         self.host = host
         self.port: Optional[int] = None
@@ -262,10 +313,15 @@ class ShardServerProcess:
         env["PYTHONPATH"] = src + (
             os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else ""
         )
+        cmd = [sys.executable, "-m", "repro.service.transport.shard_server",
+               "--root", root, "--host", host, "--port", str(port),
+               "--shard", str(shard)]
+        if codec is not None:
+            cmd += ["--codec", codec]
+        if hot_bytes:
+            cmd += ["--hot-bytes", str(hot_bytes)]
         self.proc = subprocess.Popen(
-            [sys.executable, "-m", "repro.service.transport.shard_server",
-             "--root", root, "--host", host, "--port", str(port)],
-            stdout=subprocess.PIPE, env=env, text=True, bufsize=1,
+            cmd, stdout=subprocess.PIPE, env=env, text=True, bufsize=1,
         )
 
     @classmethod
@@ -335,11 +391,12 @@ class ShardServerProcess:
 
 def spawn_shard_servers(roots: List[str], **kwargs) -> List[ShardServerProcess]:
     """Spawn one server per root *in parallel*, waiting for every announce;
-    on any failure the already-started processes are killed before raising."""
+    on any failure the already-started processes are killed before raising.
+    Each server gets its root's index as its ``shard`` metric label."""
     procs: List[ShardServerProcess] = []
     try:
-        for r in roots:
-            procs.append(ShardServerProcess(r, **kwargs))
+        for i, r in enumerate(roots):
+            procs.append(ShardServerProcess(r, shard=i, **kwargs))
         for p in procs:
             p.wait_ready()
         return procs

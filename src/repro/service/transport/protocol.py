@@ -41,6 +41,31 @@ never interpreted by op handlers, and changes no op semantics; the bump
 exists because frame meta gained a reserved key that a v2 server would
 silently pass into handler kwargs, and mixed deployments must fail at the
 first frame, not on a surprise argument.
+
+``VERSION`` 4 adds codec negotiation and pre-compressed block transfer:
+
+* :data:`OP_HELLO` — sent by the client once per connection, right after
+  connect, with ``{"codec": <preferred>}``.  The server answers with
+  ``{"codec": <negotiated>, "available": [...]}`` — the client's
+  preference when the server store can decode it, degraded along
+  lz4 -> zlib -> none otherwise (:func:`repro.dedup.store.negotiate_codec`).
+  Every later ``put_blocks`` uses the negotiated codec.
+* ``put_blocks`` frames MAY carry **pre-compressed payloads**: meta
+  ``{"codec": c, "codecs": [...], "keys": [...], "raw_sizes": [...],
+  "sizes": [...]}`` with the blob holding the concatenated payloads —
+  ``codecs`` gives each item's *effective* codec ("none" for chunks the
+  encode could not shrink, which ship raw in the same frame).  The
+  client's writer thread compressed the chunks (and computed their
+  SHA-256 keys) once, off the ingest thread; the server files the
+  payloads as-is (``BlockStore.put_compressed_blocks``) — bytes compress
+  once and travel compressed.  The legacy meta shape (``{"sizes": ...}``
+  with a raw blob) remains valid and is what a ``codec="none"``
+  negotiation produces.  ``get_blocks`` responses stay raw: restores are
+  latency-sensitive and the server already decodes to serve hot reads.
+* ``BlockCorruptionError`` joins ``KeyError`` as a typed error that
+  crosses the boundary as itself (:func:`raise_remote`), so a client-side
+  restore can map a corrupt remote block to the service's
+  ``IntegrityError`` instead of a generic transport failure.
 """
 from __future__ import annotations
 
@@ -50,7 +75,7 @@ import struct
 from typing import Optional, Tuple
 
 MAGIC = b"SCDC"
-VERSION = 3  # v3: optional "trace" meta entry (causal span propagation)
+VERSION = 4  # v4: OP_HELLO codec negotiation + pre-compressed put_blocks
 
 #: header: magic, version, op, reserved, meta_len (u32), blob_len (u64)
 HEADER = struct.Struct("!4sBBHIQ")
@@ -72,6 +97,8 @@ OP_GC_SWEEP = 9
 OP_SHUTDOWN = 10
 #: v2: server returns {"metrics": <MetricsRegistry.snapshot()>}
 OP_METRICS = 11
+#: v4: codec negotiation; request {"codec"} -> reply {"codec", "available"}
+OP_HELLO = 12
 #: response-only: remote op raised; meta = {"etype", "message"}
 OP_ERROR = 0xFF
 
@@ -87,6 +114,7 @@ OP_NAMES = {
     OP_GC_SWEEP: "gc_sweep",
     OP_SHUTDOWN: "shutdown",
     OP_METRICS: "metrics",
+    OP_HELLO: "hello",
     OP_ERROR: "error",
 }
 
@@ -158,11 +186,16 @@ def error_meta(exc: BaseException) -> dict:
 
 def raise_remote(meta: dict) -> None:
     """Re-raise a remote error locally.  ``KeyError`` keeps its type (store
-    lookups depend on it); everything else becomes ShardTransportError."""
+    lookups depend on it), as does ``BlockCorruptionError`` (restores map
+    it to ``IntegrityError``); everything else becomes ShardTransportError."""
     etype = meta.get("etype", "RuntimeError")
     message = meta.get("message", "")
     if etype == "KeyError":
         raise KeyError(message)
+    if etype == "BlockCorruptionError":
+        from repro.dedup.store import BlockCorruptionError
+
+        raise BlockCorruptionError(message)
     raise ShardTransportError(f"remote {etype}: {message}")
 
 

@@ -57,7 +57,8 @@ import threading
 import time
 import traceback
 
-from repro.dedup.store import DirBlockStore
+from repro.dedup.store import (DirBlockStore, available_codecs,
+                               negotiate_codec)
 from repro.obs import MetricsRegistry, labeled, scope, span
 from repro.service.objects import ObjectRecipe, RecipeTable
 
@@ -137,13 +138,18 @@ class _TCPServer(socketserver.ThreadingTCPServer):
 class ShardServer:
     """One shard's store + recipe table behind the framed protocol."""
 
-    def __init__(self, root: str, host: str = "127.0.0.1", port: int = 0):
+    def __init__(self, root: str, host: str = "127.0.0.1", port: int = 0,
+                 codec: str = None, hot_bytes: int = 0, shard: int = 0):
         self.root = root
         os.makedirs(root, exist_ok=True)
-        self.store = DirBlockStore(root)
+        self.store = DirBlockStore(root, codec=codec, hot_bytes=hot_bytes)
         self.recipes = RecipeTable(os.path.join(root, "recipes.json"))
         self.lock = threading.RLock()
         self.registry = MetricsRegistry()
+        # server-side encodes (raw puts under a compressing codec, tier
+        # demotions) land in this registry's store.* series, exported
+        # through the metrics op like every rpc.server.* series
+        self.store.attach_obs(self.registry, shard=shard)
         self._gc_live: dict[str, int] = {}
         self._tcp = _TCPServer((host, port), _Handler)
         self._tcp.shard = self  # type: ignore[attr-defined]
@@ -191,8 +197,17 @@ class ShardServer:
                     "version": P.VERSION}, b""
         if op == P.OP_PUT_BLOCKS:
             before = self.store.unique_chunks
-            keys = [self.store.put(c)
-                    for c in P.split_blob(blob, meta["sizes"])]
+            if meta.get("codec", "none") != "none":
+                # v4 pre-compressed form: the client's writer thread
+                # already hashed + compressed; file the payloads as-is
+                keys = self.store.put_compressed_blocks(
+                    meta["keys"], meta["raw_sizes"],
+                    meta.get("codecs", meta["codec"]),
+                    P.split_blob(blob, meta["sizes"]),
+                )
+            else:
+                keys = [self.store.put(c)
+                        for c in P.split_blob(blob, meta["sizes"])]
             # hit = a put whose key was already stored (dedup did its job);
             # measured by the unique-count delta so no extra hashing runs
             self.registry.inc("store.put_chunks", len(keys))
@@ -213,10 +228,23 @@ class ShardServer:
             self.store.sync()
             self.sync_recipes()
             return {"ok": True}, b""
+        if op == P.OP_HELLO:
+            # codec negotiation: preference honored when this process can
+            # decode it, degraded lz4 -> zlib -> none otherwise.  The
+            # store's *write* codec is its own (manifest/env/ctor) — hello
+            # only fixes how put_blocks payloads travel on this connection.
+            offered = available_codecs()
+            return {"codec": negotiate_codec(meta.get("codec", "none"),
+                                             offered),
+                    "available": list(offered),
+                    "store_codec": self.store.codec}, b""
         if op == P.OP_STAT:
+            st = self.store.stat()
             out = {
                 "stored_bytes": self.store.stored_bytes,
                 "logical_bytes": self.store.logical_bytes,
+                "compressed_bytes": self.store.compressed_bytes,
+                "compressed_ratio": st["compressed_ratio"],
                 "unique_chunks": self.store.unique_chunks,
                 "objects": len(self.recipes),
             }
@@ -249,8 +277,16 @@ def main(argv=None) -> int:
     ap.add_argument("--host", default="127.0.0.1")
     ap.add_argument("--port", type=int, default=0,
                     help="TCP port (0 = ephemeral, announced on stdout)")
+    ap.add_argument("--codec", default=None,
+                    help="write codec for new blocks (none|zlib|lz4); "
+                         "default: manifest codec, else $REPRO_STORE_CODEC")
+    ap.add_argument("--hot-bytes", type=int, default=0,
+                    help="cold-tiering hot budget in bytes (0 = off)")
+    ap.add_argument("--shard", type=int, default=0,
+                    help="shard index for metric labels")
     args = ap.parse_args(argv)
-    srv = ShardServer(args.root, args.host, args.port)
+    srv = ShardServer(args.root, args.host, args.port, codec=args.codec,
+                      hot_bytes=args.hot_bytes, shard=args.shard)
     print(f"SHARD_SERVER_READY port={srv.port} pid={os.getpid()}", flush=True)
     try:
         srv.serve_forever()

@@ -136,15 +136,18 @@ class ShardWriter:
         # the task carries its enqueuer's span context (the worker adopts
         # it) and the enqueue time (worker-side delta = queue wait)
         task = (fn, nbytes, current_context(), time.perf_counter())
-        if self._q.full():
+        try:
+            self._q.put_nowait(task)
+        except queue.Full:
             # backpressure stall: the producer is now blocked until the
             # worker frees a slot — that wait is the metric, not the
-            # uncontended enqueue cost (which is sub-microsecond)
+            # uncontended enqueue cost (which is sub-microsecond).  The
+            # full/blocked decision is one atomic put_nowait: a separate
+            # full() pre-check would miss a queue that fills between the
+            # check and the put, leaving that stall unmeasured.
             t0 = time.perf_counter()
             self._q.put(task)
             self.obs.inc(self._m_stall, time.perf_counter() - t0)
-        else:
-            self._q.put(task)
         self.obs.set_gauge(self._m_depth, self._q.qsize())
 
     def barrier(self):

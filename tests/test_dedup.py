@@ -84,6 +84,28 @@ def test_block_store_roundtrip(rng):
     assert s.savings == pytest.approx(0.5)
 
 
+def test_put_stream_rejects_malformed_bounds(rng):
+    """Regression: malformed bounds used to slice silently — an empty or
+    negative window stored a zero-length chunk, a short final bound
+    dropped the data tail from the stream, and out-of-range bounds threw
+    a confusing numpy error.  All three now fail loudly up front, and the
+    store is left untouched (no partial ingest)."""
+    data = rng.integers(0, 256, 1000, dtype=np.uint8)
+    s = BlockStore()
+    for bad in (
+        [300, 300, 1000],   # empty window
+        [300, 200, 1000],   # non-monotonic window
+        [300, 1001],        # beyond len(data)
+        [300, 900],         # short: tail silently dropped pre-fix
+    ):
+        with pytest.raises(ValueError):
+            s.put_stream(data, np.asarray(bad))
+        assert s.stored_bytes == 0 and not s.refs  # nothing half-stored
+    keys = s.put_stream(data, np.asarray([300, 1000]))
+    assert s.get_stream(keys) == data.tobytes()
+    assert s.put_stream(np.zeros(0, dtype=np.uint8), np.asarray([], int)) == []
+
+
 def test_dir_block_store_crash_safety(tmp_path, rng):
     root = str(tmp_path / "store")
     s = DirBlockStore(root)

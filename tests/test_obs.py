@@ -325,12 +325,16 @@ class TestRemoteMetrics:
             svc.close()
 
     def test_protocol_rejects_version_mismatch(self):
-        # the reserved "trace" meta entry shipped with VERSION 3: a v2
-        # peer would pass it into op handler kwargs, so mixed deployments
-        # must fail loudly at the first frame, not on a surprise argument
+        # the reserved "trace" meta entry shipped with VERSION 3 (a v2
+        # peer would pass it into op handler kwargs) and the codec
+        # handshake + pre-compressed put_blocks meta with VERSION 4 (a v3
+        # server would store compressed payloads as raw chunk bytes), so
+        # mixed deployments must fail loudly at the first frame, not on a
+        # surprise argument or silently corrupted store
         from repro.service.transport import protocol as proto
-        assert proto.VERSION == 3
+        assert proto.VERSION == 4
         assert proto.OP_NAMES[proto.OP_METRICS] == "metrics"
+        assert proto.OP_NAMES[proto.OP_HELLO] == "hello"
 
 
 def _report_mod():

@@ -1,0 +1,344 @@
+"""Compression-aware store: codec round-trips, mixed-codec depots, cold
+tiering, crash recovery, and the raw-vs-compressed accounting contract.
+
+The contract under test (docs/SERVICE.md):
+
+* restores are SHA-bit-identical whatever the codec or tier — compression
+  changes payload bytes, never chunk identity;
+* ``stored_bytes`` stays *raw* unique bytes (dedup_ratio is codec-
+  independent), ``compressed_bytes`` is the payload actually held, and
+  every GC/sweep/repair figure is in raw bytes;
+* depots are per-key self-describing: v1 (codec-less) manifests reopen
+  under a compressing codec and vice versa, and a crash between a block
+  write and the manifest sync is healed by ``gc``/``sweep`` regardless of
+  which codec wrote the orphan.
+"""
+import json
+import os
+import zlib
+
+import numpy as np
+import pytest
+
+from repro.core.params import SeqCDCParams
+from repro.dedup.store import (
+    CODEC_ENV,
+    BlockCorruptionError,
+    BlockStore,
+    DirBlockStore,
+    available_codecs,
+    decode_block,
+    encode_block,
+    negotiate_codec,
+    resolve_codec,
+    sha256_key,
+)
+from repro.service import DedupService
+
+P = SeqCDCParams(avg_size=256, seq_length=3, skip_trigger=6, skip_size=32,
+                 min_size=64, max_size=512)
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(7)
+
+
+def _compressible(rng, n=60_000):
+    """Low-entropy bytes: zlib shrinks them several-fold."""
+    return np.repeat(rng.integers(0, 8, n // 50, dtype=np.uint8), 50)[:n]
+
+
+# -- codec helpers ---------------------------------------------------------------
+
+def test_codec_resolution_and_negotiation(monkeypatch):
+    assert resolve_codec("zlib") == "zlib"
+    assert resolve_codec("none") == "none"
+    with pytest.raises(ValueError, match="unknown codec"):
+        resolve_codec("snappy")
+    monkeypatch.delenv(CODEC_ENV, raising=False)
+    assert resolve_codec(None) == "none"
+    monkeypatch.setenv(CODEC_ENV, "zlib")
+    assert resolve_codec(None) == "zlib"
+    # lz4 degrades to zlib when the peer lacks it; zlib is stdlib-universal
+    assert negotiate_codec("zlib", ("none", "zlib")) == "zlib"
+    assert negotiate_codec("lz4", ("none", "zlib")) == "zlib"
+    assert negotiate_codec("lz4", ("none",)) == "none"
+    assert "zlib" in available_codecs()
+
+
+def test_encode_block_incompressible_falls_back_to_raw(rng):
+    raw = rng.integers(0, 256, 4096, dtype=np.uint8).tobytes()
+    codec, payload = encode_block("zlib", raw)
+    # high-entropy bytes don't shrink: stored raw, never inflated
+    assert codec == "none" and payload == raw
+    low = _compressible(rng).tobytes()
+    codec, payload = encode_block("zlib", low)
+    assert codec == "zlib" and len(payload) < len(low)
+    assert decode_block(codec, payload, len(low)) == low
+
+
+def test_decode_block_corruption_is_typed():
+    with pytest.raises(BlockCorruptionError, match="decode"):
+        decode_block("zlib", b"not zlib at all")
+    with pytest.raises(BlockCorruptionError, match="raw"):
+        decode_block("zlib", zlib.compress(b"abc"), raw_size=99)
+
+
+def test_lz4_requested_but_missing_is_loud():
+    if "lz4" in available_codecs():
+        pytest.skip("lz4 installed in this environment")
+    with pytest.raises(ValueError, match="lz4"):
+        resolve_codec("lz4")
+
+
+# -- accounting contract ---------------------------------------------------------
+
+def test_keys_and_raw_accounting_are_codec_independent(rng):
+    """Same bytes, any codec: same keys, same stored/logical accounting."""
+    chunks = [_compressible(rng).tobytes(),
+              rng.integers(0, 256, 5000, dtype=np.uint8).tobytes(),
+              b"x" * 10_000]
+    raw, comp = BlockStore(codec="none"), BlockStore(codec="zlib")
+    for c in chunks:
+        assert raw.put(c) == comp.put(c) == sha256_key(c)
+    assert comp.stored_bytes == raw.stored_bytes
+    assert comp.logical_bytes == raw.logical_bytes
+    assert comp.compressed_bytes < comp.stored_bytes
+    assert raw.compressed_bytes == raw.stored_bytes
+    st = comp.stat()
+    assert st["compressed_ratio"] > 1.0
+    assert st["compressed_bytes"] == comp.compressed_bytes
+    for k in list(comp.refs):
+        assert comp.get(k) == raw.get(k)
+
+
+def test_release_and_drop_return_accounting_to_zero(rng):
+    s = BlockStore(codec="zlib")
+    low = _compressible(rng).tobytes()
+    a = s.put(low)
+    b = s.put(rng.integers(0, 256, 3000, dtype=np.uint8).tobytes())
+    s.put(low)  # dup of a
+    assert s.refs[a] == 2
+    assert s.release(a) is False  # still referenced
+    assert s.release(a) is True
+    assert s.drop(b) == 3000  # raw bytes reclaimed, payload was raw too
+    assert (s.stored_bytes, s.compressed_bytes, s.logical_bytes) == (0, 0, 0)
+
+
+# -- DirBlockStore: layout, reopen matrix, tiering -------------------------------
+
+def test_dir_store_zlib_roundtrip_and_suffix_layout(tmp_path, rng):
+    s = DirBlockStore(str(tmp_path), codec="zlib")
+    low = _compressible(rng).tobytes()
+    high = rng.integers(0, 256, 4096, dtype=np.uint8).tobytes()
+    kl, kh = s.put(low), s.put(high)
+    # compressed block lives under its codec suffix; incompressible raw
+    assert os.path.exists(tmp_path / "blocks" / (kl + ".z"))
+    assert os.path.exists(tmp_path / "blocks" / kh)
+    assert s.get(kl) == low and s.get(kh) == high
+    assert s.chunk_size(kl) == len(low)  # raw size, not payload size
+    s.sync()
+    m = json.loads((tmp_path / "manifest.json").read_text())
+    assert m["version"] == 2 and m["codec"] == "zlib"
+    assert m["key_codecs"] == {kl: "zlib"}
+    assert m["stored_bytes"] == len(low) + len(high)
+    assert m["compressed_bytes"] == s.compressed_bytes < m["stored_bytes"]
+
+
+def test_v1_manifest_reopens_under_zlib_and_back(tmp_path, rng):
+    """The back-compat matrix: codec-less depot -> zlib preference and a
+    zlib depot -> codec-less preference both read every old block."""
+    root = str(tmp_path)
+    s1 = DirBlockStore(root, codec="none")
+    low = _compressible(rng).tobytes()
+    k1 = s1.put(low)
+    s1.sync()
+    # fake a v1 manifest: exactly what pre-codec stores wrote
+    m = json.loads((tmp_path / "manifest.json").read_text())
+    (tmp_path / "manifest.json").write_text(json.dumps({
+        "refs": m["refs"], "sizes": m["sizes"],
+        "logical_bytes": m["logical_bytes"],
+        "stored_bytes": m["stored_bytes"],
+    }))
+
+    s2 = DirBlockStore(root, codec="zlib")
+    assert s2.get(k1) == low  # old raw block readable
+    assert s2.compressed_bytes == s2.stored_bytes  # v1: payload == raw
+    low2 = _compressible(rng).tobytes() + b"!"
+    k2 = s2.put(low2)  # new block compresses
+    assert s2.key_codec.get(k2) == "zlib"
+    assert s2.compressed_bytes < s2.stored_bytes
+    s2.sync()
+
+    s3 = DirBlockStore(root, codec="none")  # explicit codec beats manifest
+    assert s3.codec == "none"
+    assert s3.get(k1) == low
+    assert s3.get(k2) == low2  # zlib block still decoded per its key
+
+    s4 = DirBlockStore(root)  # no preference: manifest codec wins
+    assert s4.codec == "zlib"
+
+
+def test_manifest_codec_survives_env_default(tmp_path, rng, monkeypatch):
+    monkeypatch.setenv(CODEC_ENV, "zlib")
+    s = DirBlockStore(str(tmp_path))
+    assert s.codec == "zlib"  # env default for a fresh depot
+    s.put(_compressible(rng).tobytes())
+    s.sync()
+    monkeypatch.delenv(CODEC_ENV, raising=False)
+    assert DirBlockStore(str(tmp_path)).codec == "zlib"  # manifest wins now
+
+
+def test_cold_tiering_demotes_lru_and_restores_identically(tmp_path, rng):
+    budget = 100_000
+    s = DirBlockStore(str(tmp_path), codec="zlib", hot_bytes=budget)
+    blobs = {}
+    for i in range(8):
+        b = (_compressible(rng) + i).astype(np.uint8).tobytes()
+        blobs[s.put(b)] = b
+    hot_raw = sum(s._hot.values())
+    assert hot_raw <= budget  # LRU demotion kept the hot tier in budget
+    demoted = [k for k in blobs if s.key_codec.get(k) == "zlib"]
+    assert demoted  # something actually went cold
+    for k, b in blobs.items():
+        assert s.get(k) == b  # hot and cold both restore bit-identically
+    assert s.compressed_bytes < s.stored_bytes
+    # reopen: hot set rebuilt from raw keys, everything still readable
+    s.sync()
+    s2 = DirBlockStore(str(tmp_path), hot_bytes=budget)
+    assert sum(s2._hot.values()) <= budget
+    for k, b in blobs.items():
+        assert s2.get(k) == b
+
+
+def test_tiering_requires_compressing_codec(tmp_path):
+    with pytest.raises(ValueError, match="hot_bytes"):
+        DirBlockStore(str(tmp_path), codec="none", hot_bytes=1024)
+
+
+def test_crashed_demotion_leaves_raw_authoritative(tmp_path, rng):
+    """Both forms on disk (crash between the demotion's rename and the raw
+    unlink): reads serve the recorded-raw form; scan sweeps the derived
+    compressed copy; accounting stays raw-consistent."""
+    s = DirBlockStore(str(tmp_path), codec="zlib")
+    low = _compressible(rng).tobytes()
+    k = s.put(low)  # stored compressed
+    # simulate the inverse crash too: raw copy appears next to the .z one
+    with open(tmp_path / "blocks" / k, "wb") as f:
+        f.write(low)
+    s.sync()
+    keys = s.scan_keys()
+    assert keys == [k]
+    assert not os.path.exists(tmp_path / "blocks" / (k + ".z"))  # swept
+    assert s.get(k) == low  # self-heals to the on-disk raw form
+    assert s.stored_bytes == len(low)
+
+
+# -- crash recovery (the satellite matrix) ---------------------------------------
+
+def test_kill_between_block_rename_and_manifest_sync(tmp_path, rng):
+    """Compressed blocks land, the manifest never syncs; reopen with a
+    *different* codec preference and verify sweep/repair_ref re-adopt the
+    orphans with raw-size byte accounting."""
+    root = str(tmp_path)
+    s = DirBlockStore(root, codec="zlib")
+    low = _compressible(rng).tobytes()
+    k_live = s.put(low)
+    s.sync()  # manifest knows k_live
+    extra = _compressible(rng).tobytes() + b"tail"
+    k_orphan = s.put(extra)  # block file renamed in; no sync() = crash here
+    del s
+
+    s2 = DirBlockStore(root, codec="none")  # different preference on reopen
+    assert s2.scan_keys() == sorted([k_live, k_orphan])
+    assert k_orphan not in s2.refs  # manifest is stale, orphan unadopted
+    # repair against recomputed liveness: both keys live once
+    freed_blocks, freed_bytes, repaired = s2.sweep({k_live: 1, k_orphan: 1})
+    assert (freed_blocks, freed_bytes) == (0, 0)
+    assert repaired == 1  # the orphan was re-adopted
+    assert s2.stored_bytes == len(low) + len(extra)  # raw sizes, both codecs
+    assert s2.get(k_orphan) == extra
+    assert s2.compressed_bytes < s2.stored_bytes  # zlib payload kept as-is
+
+    # and the GC direction: orphan unreferenced -> freed bytes are raw
+    s3root = str(tmp_path / "gc")
+    s3 = DirBlockStore(s3root, codec="zlib")
+    s3.sync()
+    k_dead = s3.put(extra)
+    del s3  # crash before sync: k_dead is an on-disk orphan
+    s4 = DirBlockStore(s3root, codec="zlib")
+    freed_blocks, freed_bytes, _ = s4.sweep({})
+    assert freed_blocks == 1
+    assert freed_bytes == len(extra)  # raw bytes, though stored compressed
+    assert s4.scan_keys() == []
+    assert k_dead not in s4.refs
+
+
+def test_drop_tolerates_concurrently_vanished_orphan(tmp_path, rng):
+    """The TOCTOU fix: drop on an on-disk orphan whose file vanishes under
+    it (a racing sweep) returns 0 instead of raising."""
+    s = DirBlockStore(str(tmp_path), codec="zlib")
+    low = _compressible(rng).tobytes()
+    k = s.put(low)
+    s.refs.pop(k)  # make it an on-disk orphan (never entered this manifest)
+    s._forget_meta(k)
+    assert s.drop(k) == len(low)  # reports raw bytes even for .z orphans
+    assert s.drop(k) == 0  # already gone: the racing-sweep outcome
+    assert s.drop("0" * 64) == 0  # never existed
+
+
+def test_tmp_files_swept_on_scan(tmp_path, rng):
+    s = DirBlockStore(str(tmp_path), codec="zlib")
+    k = s.put(_compressible(rng).tobytes())
+    torn = tmp_path / "blocks" / ("f" * 64 + ".z.tmp")
+    torn.write_bytes(b"torn write")
+    assert s.scan_keys() == [k]
+    assert not torn.exists()
+
+
+# -- service-level differential matrix -------------------------------------------
+
+@pytest.mark.parametrize("codec,hot_bytes", [
+    ("none", 0), ("zlib", 0), ("zlib", 40_000),
+])
+def test_service_restore_bit_identical_across_codecs(tmp_path, rng, codec,
+                                                     hot_bytes):
+    """The acceptance pin, local transport: codec x tiering never changes
+    restored bytes, object names, or the dedup (raw) accounting."""
+    objs = [_compressible(rng),
+            rng.integers(0, 256, 30_000, dtype=np.uint8),
+            np.zeros(0, dtype=np.uint8)]
+    ref = DedupService(params=P, slots=4, min_bucket=1024, codec="none")
+    svc = DedupService.open(str(tmp_path / codec), params=P, slots=4,
+                            min_bucket=1024, codec=codec,
+                            hot_bytes=hot_bytes)
+    for i, o in enumerate(objs):
+        ref.submit(f"o{i}", o)
+        svc.submit(f"o{i}", o)
+    ref.flush()
+    svc.flush()
+    for i, o in enumerate(objs):
+        assert svc.get(f"o{i}") == ref.get(f"o{i}") == o.tobytes()
+    a, b = ref.stats(), svc.stats()
+    assert a.stored_bytes == b.stored_bytes  # raw accounting, codec-free
+    assert a.dedup_ratio == b.dedup_ratio
+    assert a.unique_chunks == b.unique_chunks
+    if codec == "zlib":
+        assert b.compressed_ratio > b.dedup_ratio
+        assert b.codec == "zlib"
+
+
+def test_corrupt_compressed_block_raises_integrity_error(tmp_path, rng):
+    svc = DedupService.open(str(tmp_path), params=P, slots=4,
+                            min_bucket=1024, codec="zlib")
+    svc.put("obj", _compressible(rng))
+    r = svc.recipes.get("obj")
+    k = r.keys[0]
+    path = tmp_path / "blocks" / (k + ".z")
+    assert path.exists()
+    path.write_bytes(b"garbage that is not zlib")
+    from repro.service import IntegrityError
+
+    with pytest.raises(IntegrityError):
+        svc.get("obj")

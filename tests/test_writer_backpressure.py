@@ -95,6 +95,23 @@ def test_backpressure_moves_queue_depth_gauge_and_stall_counter():
     w.close()
 
 
+def test_unblocked_submits_record_exactly_zero_stall():
+    """Regression: submit used to time *every* enqueue, so a busy producer
+    accumulated scheduler noise into ``writer.stall_s`` and the counter
+    read as perpetual light backpressure.  The fix enqueues with
+    ``put_nowait`` and only times the blocking path — a queue that never
+    fills must leave the stall counter at exactly 0.0."""
+    w = ShardWriter(max_pending=500, shard=5)
+    stall = labeled("writer.stall_s", shard=5)
+    for i in range(200):  # < max_pending: the FIFO can never fill
+        w.submit(lambda: None, nbytes=1)
+    w.barrier()
+    assert w.obs.counter(stall) == 0.0, \
+        "stall counter moved without a single blocked submit"
+    assert w.obs.counter(labeled("writer.tasks", shard=5)) == 200
+    w.close()
+
+
 def test_writer_metrics_survive_failed_flush():
     """A failed task is counted (task_errors, tasks) and the error is
     consumed at the barrier — but the registry keeps counting across the
